@@ -1,0 +1,91 @@
+"""Paper Fig. 7 (a-d): ISH/DSH speedup + computation time vs core count.
+
+Random DAGs per paper §4.1: 20/50/100 nodes, density 10 %, t,w ~ U[1,10];
+cores 2..20.  Validates Obs. 1 (plateau at max parallelism), Obs. 2
+(DSH >= ISH speedup), Obs. 3 (ISH 1-2 orders of magnitude faster), Obs. 4
+(DSH duplicates -> memory overhead).
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Dict, List
+
+from repro.core import dsh, ish, random_dag, speedup, validate
+
+CORES = (2, 4, 6, 8, 12, 16, 20)
+SIZES = (20, 50, 100)
+N_GRAPHS = 10
+
+
+def run(n_graphs: int = N_GRAPHS, sizes=SIZES, cores=CORES) -> List[Dict]:
+    rows = []
+    for n in sizes:
+        dags = [random_dag(n, 0.10, seed=s) for s in range(n_graphs)]
+        for m in cores:
+            for name, fn in (("ish", ish), ("dsh", dsh)):
+                sps, times, dups = [], [], []
+                for dag in dags:
+                    t0 = time.perf_counter()
+                    s = fn(dag, m)
+                    times.append(time.perf_counter() - t0)
+                    validate(s, dag)
+                    sps.append(speedup(s, dag))
+                    dups.append(max(s.n_duplicates(dag), 0))
+                rows.append({
+                    "bench": "fig7",
+                    "nodes": n,
+                    "cores": m,
+                    "heuristic": name,
+                    "speedup_mean": statistics.mean(sps),
+                    "time_mean_s": statistics.mean(times),
+                    "dups_mean": statistics.mean(dups),
+                    "max_par_mean": statistics.mean(
+                        d.max_parallelism() for d in dags),
+                })
+    return rows
+
+
+def validate_observations(rows: List[Dict]) -> Dict[str, bool]:
+    by = {(r["nodes"], r["cores"], r["heuristic"]): r for r in rows}
+    sizes = sorted({r["nodes"] for r in rows})
+    cores = sorted({r["cores"] for r in rows})
+    obs = {}
+    # Obs 1: plateau — last two core counts within 5%
+    obs["obs1_plateau"] = all(
+        abs(by[(n, cores[-1], h)]["speedup_mean"]
+            - by[(n, cores[-2], h)]["speedup_mean"])
+        <= 0.05 * by[(n, cores[-2], h)]["speedup_mean"] + 1e-9
+        for n in sizes for h in ("ish", "dsh"))
+    # Obs 2: dsh >= ish on average (small tolerance)
+    obs["obs2_dsh_geq_ish"] = all(
+        by[(n, m, "dsh")]["speedup_mean"] >= by[(n, m, "ish")]["speedup_mean"] - 0.05
+        for n in sizes for m in cores)
+    # more nodes -> more speedup at max cores
+    obs["more_nodes_more_speedup"] = (
+        by[(sizes[-1], cores[-1], "dsh")]["speedup_mean"]
+        >= by[(sizes[0], cores[-1], "dsh")]["speedup_mean"] - 1e-9)
+    # Obs 3: ish faster than dsh
+    obs["obs3_ish_faster"] = all(
+        by[(n, m, "ish")]["time_mean_s"] <= by[(n, m, "dsh")]["time_mean_s"]
+        for n in sizes for m in cores)
+    # Obs 4: dsh duplicates
+    obs["obs4_dsh_duplicates"] = any(
+        by[(n, m, "dsh")]["dups_mean"] > 0 for n in sizes for m in cores)
+    return obs
+
+
+def main(argv=None) -> List[Dict]:
+    rows = run()
+    obs = validate_observations(rows)
+    for r in rows:
+        print(f"fig7,{r['nodes']},{r['cores']},{r['heuristic']},"
+              f"{r['speedup_mean']:.3f},{r['time_mean_s']*1e3:.2f}ms,"
+              f"{r['dups_mean']:.1f}")
+    for k, v in obs.items():
+        print(f"fig7.{k},{'PASS' if v else 'FAIL'}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""§Roofline report: three-term roofline per (arch × shape × mesh) from the
+dry-run artifacts (launch/analysis.py writes them; this renders + checks).
+
+    compute    = HLO_FLOPs / peak_FLOPs        (197 TF/s bf16, v5e)
+    memory     = HLO_bytes / HBM_bw            (819 GB/s)
+    collective = collective_bytes / ICI_bw     (50 GB/s/link)
+
+plus MODEL_FLOPS/HLO_FLOPs (useful-compute ratio) and the dominant term.
+Reads artifacts/dryrun (current) and artifacts/dryrun_baseline (the
+paper-faithful baseline) so §Perf can show both.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ART = os.path.join(HERE, "artifacts", "dryrun")
+ART_BASE = os.path.join(HERE, "artifacts", "dryrun_baseline")
+
+SUGGEST = {
+    "compute_s": "increase per-chip arithmetic intensity (larger microbatch/"
+                 "block) or cut redundant FLOPs (dispatch einsums, remat)",
+    "memory_s": "fuse epilogues / keep accumulations in bf16 / shrink "
+                "transients (chunk scans, avoid f32 copies of big operands)",
+    "collective_s": "reshard to cut gather volume (2-D param sharding, "
+                    "kvseq-sharding) or overlap collectives with compute",
+}
+
+
+def load(dirpath: str) -> List[Dict]:
+    recs = []
+    if not os.path.isdir(dirpath):
+        return recs
+    for f in sorted(os.listdir(dirpath)):
+        if f.endswith(".json"):
+            with open(os.path.join(dirpath, f)) as fh:
+                r = json.load(fh)
+            if "roofline" in r:
+                recs.append(r)
+    return recs
+
+
+def fraction_of_roofline(rec: Dict) -> Optional[float]:
+    """model-FLOPs-derived bound / achieved bound (1.0 = at the roofline).
+
+    The ideal step time is MODEL_FLOPS/chip / peak; the achieved bound is
+    the max roofline term.  Ratio < 1 means overhead (redundant compute,
+    memory, or communication) dominates the ideal."""
+    ideal = rec["model_flops_per_dev"] / 197e12
+    achieved = rec["step_time_bound_s"]
+    return ideal / achieved if achieved else None
+
+
+def table(recs: List[Dict], title: str) -> str:
+    lines = [f"### {title}", "",
+             "| arch | shape | mesh | compute | memory | collective | "
+             "dominant | HBM/dev | useful FLOPs | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        t = r["roofline"]
+        uf = r.get("useful_flops_ratio")
+        fr = fraction_of_roofline(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']*1e3:.2f} ms | {t['memory_s']*1e3:.2f} ms "
+            f"| {t['collective_s']*1e3:.2f} ms | {r['dominant'][:-2]} "
+            f"| {r['hbm_per_dev_bytes']/2**30:.1f} GiB "
+            f"| {uf*100 if uf else 0:.0f}% | {fr*100 if fr else 0:.1f}% |")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> List[Dict]:
+    cur = load(ART)
+    base = load(ART_BASE)
+    print(f"roofline,cells={len(cur)},baseline_cells={len(base)}")
+    doms = {}
+    for r in cur:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        fr = fraction_of_roofline(r)
+        print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+              f"dom={r['dominant'][:-2]},frac={fr*100 if fr else 0:.1f}%,"
+              f"hbm={r['hbm_per_dev_bytes']/2**30:.1f}GiB")
+    for d, n in sorted(doms.items()):
+        print(f"roofline.dominant.{d[:-2]},{n}")
+    # render markdown for EXPERIMENTS.md
+    out = os.path.join(HERE, "artifacts", "roofline.md")
+    with open(out, "w") as f:
+        f.write(table(cur, "Current (optimized)") + "\n\n")
+        if base:
+            f.write(table(base, "Paper-faithful baseline") + "\n")
+    print(f"roofline.markdown,{out}")
+    return cur
+
+
+if __name__ == "__main__":
+    main()

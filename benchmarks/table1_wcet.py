@@ -1,0 +1,127 @@
+"""Paper Tables 1-2 + §5.4: WCET-model scheduling of the GoogLeNet-like net.
+
+Uses the paper's OWN OTAWA WCET bounds (Table 1, cycles) as ``t(v)`` and
+Table-2-calibrated communication costs as ``w(e)``, schedules on 4 workers
+with DSH, and checks the headline claims:
+
+* whole-network WCET gain  ≈ 8 %   (2.90e10 -> 2.68e10 cycles),
+* parallelizable-segment gain ≈ 46 % (4.81e9 -> 2.60e9 cycles).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import DAG, dsh, ish, validate
+from repro.models.cnn import inception_net
+
+# ---- paper Table 1 (OTAWA WCET bounds, cycles) --------------------------- #
+TABLE1 = {
+    "input": 5.27e6,
+    "conv_1": 8.16e9,
+    "maxpool_1": 1.22e8,
+    "conv_2": 1.59e10,
+    "maxpool_2": 2.71e7,
+    "inception_1/conv_a": 4.57e8,
+    "inception_1/conv_b1": 2.86e8,
+    "inception_1/conv_b2": 7.92e8,
+    "inception_1/conv_c1": 5.72e7,
+    "inception_1/conv_c2": 1.63e8,
+    "inception_1/maxpool": 2.49e7,
+    "inception_1/conv_d": 2.29e8,
+    "inception_1/concat": 6.06e6,
+    "inception_2/conv_a": 6.86e8,
+    "inception_2/conv_b1": 3.43e8,
+    "inception_2/conv_b2": 1.14e9,
+    "inception_2/conv_c1": 8.58e7,
+    "inception_2/conv_c2": 2.53e8,
+    "inception_2/maxpool": 2.49e7,
+    "inception_2/conv_d": 2.29e8,
+    "inception_2/concat": 7.49e6,
+    "avgpool": 2.51e6,
+    "reshape": 0.0,
+    "gemm": 2.67e7,
+    "output": 3.51e4,
+}
+SEQ_TOTAL = 2.90e10           # paper Table 1 total
+SEGMENT_SEQ = 4.81e9          # paper §5.4 parallelizable segment
+PAPER_WHOLE = 2.68e10
+PAPER_SEGMENT = 2.60e9
+
+# Table 2 calibration: comm cost = bytes / BW in cycles; the paper's
+# synchronization-layer WCETs (1.19e5..3.58e5 cycles) correspond to the
+# inception branch outputs (~100-200 KB) at ~1 GB/s on a 1.4 GHz core.
+CYCLES_PER_BYTE = 1.4e9 / 1.0e9
+
+
+def paper_dag() -> DAG:
+    model = inception_net(224)
+    t = {l.name: max(TABLE1[l.name], 1.0) for l in model.layers}
+    edges, w = [], {}
+    for l in model.layers:
+        for p in l.inputs:
+            e = (p, l.name)
+            edges.append(e)
+            w[e] = model.spec(p).out_bytes() * CYCLES_PER_BYTE
+    return DAG.build([l.name for l in model.layers], edges, t, w)
+
+
+def segment_dag(dag: DAG) -> DAG:
+    keep = [n for n in dag.nodes
+            if n == "maxpool_2" or n.startswith("inception")]
+    return dag.subgraph(keep)
+
+
+def run(workers: int = 4) -> List[Dict]:
+    dag = paper_dag()
+    rows = []
+    seq = dag.sequential_makespan()
+    for name, fn in (("dsh", dsh), ("ish", ish)):
+        s = fn(dag, workers)
+        validate(s, dag)
+        mk = s.makespan(dag)
+        seg = segment_dag(dag)
+        ss = fn(seg, workers)
+        validate(ss, seg)
+        mseg = ss.makespan(seg)
+        rows.append({
+            "bench": "table1",
+            "heuristic": name,
+            "workers": workers,
+            "seq_cycles": seq,
+            "whole_cycles": mk,
+            "whole_gain": 1 - mk / seq,
+            "segment_seq_cycles": seg.sequential_makespan(),
+            "segment_cycles": mseg,
+            "segment_gain": 1 - mseg / seg.sequential_makespan(),
+        })
+    return rows
+
+
+def validate_claims(rows: List[Dict]) -> Dict[str, bool]:
+    d = next(r for r in rows if r["heuristic"] == "dsh")
+    return {
+        "table1_total_matches_paper": abs(d["seq_cycles"] - SEQ_TOTAL) / SEQ_TOTAL < 0.01,
+        "segment_total_matches_paper": abs(d["segment_seq_cycles"] - SEGMENT_SEQ) / SEGMENT_SEQ < 0.01,
+        # paper: 8% whole-net gain (conv_1/conv_2 dominate sequentially)
+        "whole_gain_approx_8pct": 0.04 <= d["whole_gain"] <= 0.15,
+        # paper: 46% segment gain
+        "segment_gain_approx_46pct": 0.35 <= d["segment_gain"] <= 0.55,
+    }
+
+
+def main(argv=None) -> List[Dict]:
+    rows = run()
+    claims = validate_claims(rows)
+    for r in rows:
+        print(f"table1,{r['heuristic']},whole={r['whole_cycles']:.3e}"
+              f"(gain {r['whole_gain']*100:.1f}%),"
+              f"segment={r['segment_cycles']:.3e}"
+              f"(gain {r['segment_gain']*100:.1f}%)")
+    print(f"table1.paper_refs,whole={PAPER_WHOLE:.2e}(8%),segment={PAPER_SEGMENT:.2e}(46%)")
+    for k, v in claims.items():
+        print(f"table1.{k},{'PASS' if v else 'FAIL'}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Quickstart: train a small qwen2-family LM on synthetic data (CPU, ~1 min).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+from repro.configs import get_config
+from repro.data import SyntheticLMDataset
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig, Trainer
+
+
+def main():
+    # reduced same-family config (the full qwen2-0.5b is exercised by the
+    # production-mesh dry-run: python -m repro.launch.dryrun)
+    cfg = dataclasses.replace(
+        get_config("qwen2-0.5b").reduced(),
+        n_layers=4, d_model=128, d_ff=512, vocab=2048, max_seq=256,
+    )
+    tcfg = TrainConfig(
+        microbatches=2,
+        remat=False,
+        optim=AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=300),
+    )
+    ds = SyntheticLMDataset(cfg.vocab, seq_len=128, global_batch=8, seed=0)
+    tr = Trainer(cfg, tcfg, ds)
+    print(f"arch={cfg.name}  params="
+          f"{sum(x.size for x in __import__('jax').tree.leaves(tr.params)):,}")
+    out = tr.run(60, log_every=10)
+    first, last = tr.history[0]["loss"], out["final_loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f} in {out['steps']} steps "
+          f"({out['wall_s']:.0f}s)")
+    assert last < first, "training should reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""Atomic, sharded, resumable checkpoints (fault-tolerance substrate).
+
+Layout (one directory per step)::
+
+    <root>/step_000123/
+        manifest.json      # tree structure, shapes, dtypes, config hash
+        shard_00000.npz    # flat leaves (split into ~512 MB shards)
+    <root>/LATEST          # atomic pointer file
+
+Guarantees:
+
+* **Atomicity** — writes go to ``step_X.tmp-<pid>`` then ``os.rename`` (an
+  atomic dir move on POSIX); ``LATEST`` is written via rename too.  A crash
+  mid-save never corrupts an existing checkpoint.
+* **Keep-k GC** — old steps garbage-collected after a successful save.
+* **Async** — ``save(..., blocking=False)`` snapshots to host memory
+  synchronously (cheap) and writes in a background thread, overlapping the
+  next training steps; ``wait()`` joins before the next save or exit.
+* **Resume** — ``latest_step()`` + ``restore(step)`` rebuild the pytree; a
+  restarted (or elastically re-meshed) job resumes exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _restore_dtype(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    """npz round-trips extension dtypes (bfloat16, fp8) as raw void bytes;
+    re-view them using the dtype recorded in the manifest."""
+    if str(arr.dtype) == dtype_str:
+        return arr
+    try:
+        import ml_dtypes  # numpy extension dtypes used by jax
+
+        target = np.dtype(getattr(ml_dtypes, dtype_str))
+    except (AttributeError, ImportError, TypeError):
+        target = np.dtype(dtype_str)
+    if arr.dtype.itemsize == target.itemsize:
+        return arr.view(target)
+    return arr.astype(target)
+
+
+def _flatten_with_paths(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3, shard_bytes: int = 512 * 2**20):
+        self.root = root
+        self.keep = keep
+        self.shard_bytes = shard_bytes
+        os.makedirs(root, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------ #
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:09d}")
+
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.root, "LATEST")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            s = int(f.read().strip())
+        return s if os.path.isdir(self._step_dir(s)) else None
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.root):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, tree, extra: Optional[Dict] = None, blocking: bool = True):
+        """Snapshot ``tree`` (device -> host) and persist it."""
+        self.wait()  # one in-flight save at a time
+        flat, _ = _flatten_with_paths(tree)
+        host = [(k, np.asarray(jax.device_get(v))) for k, v in flat]
+
+        def _write():
+            try:
+                self._write_ckpt(step, host, extra or {})
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        if blocking:
+            _write()
+            self._raise_if_failed()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise RuntimeError("async checkpoint write failed") from e
+
+    def _write_ckpt(self, step: int, host: List[Tuple[str, np.ndarray]], extra: Dict):
+        final = self._step_dir(step)
+        tmp = f"{final}.tmp-{os.getpid()}"
+        if os.path.isdir(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        # pack leaves into size-bounded npz shards
+        manifest: Dict[str, Any] = {"step": step, "extra": extra, "leaves": [], "n_shards": 0}
+        shard: Dict[str, np.ndarray] = {}
+        shard_size = 0
+        shard_id = 0
+
+        def flush():
+            nonlocal shard, shard_size, shard_id
+            if shard:
+                np.savez(os.path.join(tmp, f"shard_{shard_id:05d}.npz"), **shard)
+                shard_id += 1
+                shard, shard_size = {}, 0
+
+        for i, (key, arr) in enumerate(host):
+            name = f"leaf_{i:06d}"
+            manifest["leaves"].append(
+                {"key": key, "name": name, "shard": shard_id,
+                 "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            )
+            shard[name] = arr
+            shard_size += arr.nbytes
+            if shard_size >= self.shard_bytes:
+                flush()
+        flush()
+        manifest["n_shards"] = shard_id
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        # atomic LATEST pointer
+        lp = os.path.join(self.root, "LATEST")
+        with open(lp + ".tmp", "w") as f:
+            f.write(str(step))
+        os.replace(lp + ".tmp", lp)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+    def restore(self, step: int, like=None):
+        """Load the checkpoint at ``step``.
+
+        If ``like`` (a pytree of the same structure) is given, the flat
+        leaves are unflattened into its treedef; otherwise a flat
+        ``{key: array}`` dict is returned.
+        """
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        shards = {}
+        for rec in manifest["leaves"]:
+            sid = rec["shard"]
+            if sid not in shards:
+                shards[sid] = np.load(os.path.join(d, f"shard_{sid:05d}.npz"))
+        leaves = [
+            _restore_dtype(shards[r["shard"]][r["name"]], r["dtype"])
+            for r in manifest["leaves"]
+        ]
+        if like is None:
+            return {r["key"]: l for r, l in zip(manifest["leaves"], leaves)}, manifest
+        _, treedef = jax.tree.flatten(like)
+        return jax.tree.unflatten(treedef, leaves), manifest

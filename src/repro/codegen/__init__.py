@@ -1,0 +1,13 @@
+from repro.codegen.plan import ExecutionPlan, Superstep, Transfer, build_plan
+from repro.codegen.executor import interpret_plan, build_mpmd_executor
+from repro.codegen.render import render_pseudo_c
+
+__all__ = [
+    "ExecutionPlan",
+    "Superstep",
+    "Transfer",
+    "build_plan",
+    "interpret_plan",
+    "build_mpmd_executor",
+    "render_pseudo_c",
+]

@@ -1,0 +1,137 @@
+"""Schedule -> ExecutionPlan: the paper's code-generation step, made static.
+
+ACETONE emits one C inference function per core, with *Writing*/*Reading*
+operators around every cross-core edge (paper §5.2-5.3).  On TPU the flag
+protocol's guarantees hold by construction in SSA dataflow, so the plan is a
+sequence of **supersteps**: a per-worker compute segment followed by a
+global communication round (the Writing/Reading pairs of that round).  The
+executor turns each comm round into ``lax.ppermute`` collectives; the paper's
+per-(src,dst) flag+array channel becomes one permute edge.
+
+The plan is built from the *schedule*, not re-derived: the supplier of each
+cross-worker edge is the schedule's availability argmin, matching the
+improved encoding's earliest-finish semantics (constraint 11).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.graph import DAG
+from repro.core.schedule import Instance, Schedule
+
+__all__ = ["Transfer", "Superstep", "ExecutionPlan", "build_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Transfer:
+    node: str      # value being communicated (producer layer name)
+    src: int
+    dst: int
+
+    def label(self) -> str:
+        return f"{self.src}_{self.dst}_{self.node}"  # paper's src_dst_id norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Superstep:
+    compute: Tuple[Tuple[str, ...], ...]   # per-worker ordered node lists
+    transfers: Tuple[Transfer, ...]        # global comm round after compute
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    n_workers: int
+    steps: Tuple[Superstep, ...]
+    makespan: float                        # scheduler's predicted makespan
+    sink: str
+    sink_worker: int
+
+    @property
+    def n_transfers(self) -> int:
+        return sum(len(s.transfers) for s in self.steps)
+
+    def comm_bytes(self, out_bytes: Dict[str, float]) -> float:
+        return sum(out_bytes[t.node] for s in self.steps for t in s.transfers)
+
+
+def build_plan(schedule: Schedule, dag: DAG) -> ExecutionPlan:
+    """Chop a valid schedule into compute/comm supersteps.
+
+    Greedy simulation: repeatedly (1) let every worker run the maximal prefix
+    of its sub-schedule whose inputs are locally available, (2) emit one comm
+    round containing, for every worker's next blocked instance, the transfers
+    of its missing inputs from their schedule-designated suppliers.  A valid
+    schedule can always make progress, so this terminates.
+    """
+    m = schedule.n_workers
+    queues: List[List[Instance]] = [list(schedule.sub_schedule(w)) for w in range(m)]
+    have: Set[Tuple[str, int]] = set()     # (node, worker) locally available
+    by_node: Dict[str, List[Instance]] = {}
+    for inst in schedule.instances:
+        by_node.setdefault(inst.node, []).append(inst)
+
+    def supplier(u: str, consumer_worker: int) -> Optional[Instance]:
+        # only instances whose value already exists on their own worker can
+        # supply; pick the earliest-finishing one (constraint-11 semantics).
+        ready = [iu for iu in by_node[u] if (u, iu.worker) in have]
+        if not ready:
+            return None  # value not produced anywhere yet — wait a round
+        return min(ready, key=lambda iu: (iu.finish(dag), iu.worker))
+
+    steps: List[Superstep] = []
+    guard = 0
+    while any(queues):
+        guard += 1
+        if guard > 10 * (len(dag.nodes) * m + 1):
+            raise RuntimeError("plan construction did not converge (invalid schedule?)")
+        # ---- compute phase -------------------------------------------- #
+        segs: List[List[str]] = [[] for _ in range(m)]
+        progress = True
+        while progress:
+            progress = False
+            for w in range(m):
+                while queues[w]:
+                    head = queues[w][0]
+                    if all((u, w) in have for u in dag.parents(head.node)):
+                        segs[w].append(head.node)
+                        have.add((head.node, w))
+                        queues[w].pop(0)
+                        progress = True
+                    else:
+                        break
+        # ---- comm phase ------------------------------------------------ #
+        transfers: List[Transfer] = []
+        seen: Set[Tuple[str, int, int]] = set()
+        for w in range(m):
+            if not queues[w]:
+                continue
+            head = queues[w][0]
+            for u in dag.parents(head.node):
+                if (u, w) in have:
+                    continue
+                sup = supplier(u, w)
+                if sup is None:
+                    continue  # producer not ready anywhere; next round
+                key = (u, sup.worker, w)
+                if key not in seen:
+                    seen.add(key)
+                    transfers.append(Transfer(node=u, src=sup.worker, dst=w))
+                have.add((u, w))
+        if not any(segs) and not transfers:
+            raise RuntimeError("deadlocked plan: no compute and no transfers")
+        steps.append(Superstep(
+            compute=tuple(tuple(s) for s in segs),
+            transfers=tuple(transfers),
+        ))
+
+    sinks = dag.sinks()
+    sink = sinks[0]
+    sink_inst = min(by_node[sink], key=lambda i: i.finish(dag))
+    return ExecutionPlan(
+        n_workers=m,
+        steps=tuple(steps),
+        makespan=schedule.makespan(dag),
+        sink=sink,
+        sink_worker=sink_inst.worker,
+    )

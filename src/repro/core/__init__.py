@@ -1,0 +1,44 @@
+"""Core of the reproduction: the paper's DAG-scheduling contribution."""
+from repro.core.graph import DAG, GraphError, density, random_dag
+from repro.core.costmodel import (
+    HardwareSpec,
+    OpCost,
+    TPU_V5E,
+    annotate,
+    roofline_time,
+)
+from repro.core.schedule import (
+    Instance,
+    Schedule,
+    ScheduleError,
+    remove_redundant_duplicates,
+    single_worker_schedule,
+    speedup,
+    validate,
+)
+from repro.core.list_scheduling import dsh, ish, list_schedule
+from repro.core.exact import SolverResult, branch_and_bound
+
+__all__ = [
+    "DAG",
+    "GraphError",
+    "density",
+    "random_dag",
+    "HardwareSpec",
+    "OpCost",
+    "TPU_V5E",
+    "annotate",
+    "roofline_time",
+    "Instance",
+    "Schedule",
+    "ScheduleError",
+    "remove_redundant_duplicates",
+    "single_worker_schedule",
+    "speedup",
+    "validate",
+    "dsh",
+    "ish",
+    "list_schedule",
+    "SolverResult",
+    "branch_and_bound",
+]

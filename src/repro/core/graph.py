@@ -1,0 +1,283 @@
+"""Task-DAG model of a neural network (paper §2.2).
+
+A directed acyclic graph ``(V, E, t, w)`` where nodes are layers (or finer
+operator slices), ``t(v)`` is the per-worker cost of node ``v`` and ``w(e)``
+the communication latency paid when the endpoints of ``e`` land on distinct
+workers.  On the paper's CPU target these are OTAWA WCETs; on our TPU target
+they come from the roofline cost model (:mod:`repro.core.costmodel`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random as _random
+from typing import Callable, Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+__all__ = [
+    "DAG",
+    "GraphError",
+    "random_dag",
+    "density",
+]
+
+
+class GraphError(ValueError):
+    """Raised for malformed graphs (cycles, unknown nodes, ...)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DAG:
+    """Immutable task DAG.
+
+    Attributes
+    ----------
+    nodes:   tuple of hashable node ids (layer names).
+    edges:   tuple of ``(u, v)`` pairs, data flowing u -> v.
+    t:       mapping node -> execution cost on one worker (WCET analogue).
+    w:       mapping edge -> communication latency if endpoints differ.
+    """
+
+    nodes: Tuple[str, ...]
+    edges: Tuple[Tuple[str, str], ...]
+    t: Mapping[str, float]
+    w: Mapping[Tuple[str, str], float]
+
+    # ------------------------------------------------------------------ #
+    # construction & validation
+    # ------------------------------------------------------------------ #
+    def __post_init__(self) -> None:
+        node_set = set(self.nodes)
+        if len(node_set) != len(self.nodes):
+            raise GraphError("duplicate node ids")
+        for (u, v) in self.edges:
+            if u not in node_set or v not in node_set:
+                raise GraphError(f"edge ({u},{v}) references unknown node")
+            if u == v:
+                raise GraphError(f"self loop on {u}")
+        if len(set(self.edges)) != len(self.edges):
+            raise GraphError("duplicate edges")
+        for n in self.nodes:
+            if n not in self.t:
+                raise GraphError(f"missing cost t({n})")
+            if self.t[n] < 0:
+                raise GraphError(f"negative cost t({n})")
+        for e in self.edges:
+            if e not in self.w:
+                raise GraphError(f"missing weight w({e})")
+            if self.w[e] < 0:
+                raise GraphError(f"negative weight w({e})")
+        # cycle check via topological order (raises on cycle)
+        self.topological_order()
+
+    @staticmethod
+    def build(
+        nodes: Iterable[str],
+        edges: Iterable[Tuple[str, str]],
+        t: Mapping[str, float],
+        w: Optional[Mapping[Tuple[str, str], float]] = None,
+        default_w: float = 0.0,
+    ) -> "DAG":
+        nodes = tuple(nodes)
+        edges = tuple(tuple(e) for e in edges)
+        w = dict(w or {})
+        for e in edges:
+            w.setdefault(e, default_w)
+        return DAG(nodes=nodes, edges=edges, t=dict(t), w=w)
+
+    # ------------------------------------------------------------------ #
+    # basic structure
+    # ------------------------------------------------------------------ #
+    def parents(self, v: str) -> Tuple[str, ...]:
+        return tuple(u for (u, x) in self.edges if x == v)
+
+    def children(self, v: str) -> Tuple[str, ...]:
+        return tuple(x for (u, x) in self.edges if u == v)
+
+    def parent_map(self) -> Dict[str, Tuple[str, ...]]:
+        m: Dict[str, List[str]] = {n: [] for n in self.nodes}
+        for (u, v) in self.edges:
+            m[v].append(u)
+        return {k: tuple(vs) for k, vs in m.items()}
+
+    def child_map(self) -> Dict[str, Tuple[str, ...]]:
+        m: Dict[str, List[str]] = {n: [] for n in self.nodes}
+        for (u, v) in self.edges:
+            m[u].append(v)
+        return {k: tuple(vs) for k, vs in m.items()}
+
+    def sources(self) -> Tuple[str, ...]:
+        have_parent = {v for (_, v) in self.edges}
+        return tuple(n for n in self.nodes if n not in have_parent)
+
+    def sinks(self) -> Tuple[str, ...]:
+        have_child = {u for (u, _) in self.edges}
+        return tuple(n for n in self.nodes if n not in have_child)
+
+    def topological_order(self) -> Tuple[str, ...]:
+        """Kahn's algorithm; deterministic (input node order breaks ties)."""
+        indeg = {n: 0 for n in self.nodes}
+        for (_, v) in self.edges:
+            indeg[v] += 1
+        cm = {n: [] for n in self.nodes}
+        for (u, v) in self.edges:
+            cm[u].append(v)
+        order: List[str] = []
+        ready = [n for n in self.nodes if indeg[n] == 0]
+        pos = {n: i for i, n in enumerate(self.nodes)}
+        while ready:
+            ready.sort(key=lambda n: pos[n])
+            n = ready.pop(0)
+            order.append(n)
+            for c in cm[n]:
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    ready.append(c)
+        if len(order) != len(self.nodes):
+            raise GraphError("graph has a cycle")
+        return tuple(order)
+
+    # ------------------------------------------------------------------ #
+    # paper-specific helpers
+    # ------------------------------------------------------------------ #
+    def one_sink(self, sink_name: str = "__sink__", sink_cost: float = 0.0) -> "DAG":
+        """Return an equivalent single-sink DAG (paper §2.2, Fig. 3 red part).
+
+        A zero-cost virtual node is appended, fed by every former sink with
+        zero-latency edges.  If the graph already has a unique sink it is
+        returned unchanged.
+        """
+        sinks = self.sinks()
+        if len(sinks) == 1:
+            return self
+        if sink_name in self.nodes:
+            raise GraphError(f"sink name {sink_name!r} already used")
+        nodes = self.nodes + (sink_name,)
+        new_edges = self.edges + tuple((s, sink_name) for s in sinks)
+        t = dict(self.t)
+        t[sink_name] = sink_cost
+        w = dict(self.w)
+        for s in sinks:
+            w[(s, sink_name)] = 0.0
+        return DAG(nodes=nodes, edges=new_edges, t=t, w=w)
+
+    def levels(self) -> Dict[str, float]:
+        """Critical-path level of each node (paper §3.3, Kruatrachue).
+
+        ``level(v) = t(v) + max over children c of (level(c))`` — the sum of
+        node execution times along the longest path from ``v`` to the sink
+        (communication weights excluded, as in the classical definition).
+        """
+        lv: Dict[str, float] = {}
+        cm = self.child_map()
+        for n in reversed(self.topological_order()):
+            cs = cm[n]
+            lv[n] = self.t[n] + (max(lv[c] for c in cs) if cs else 0.0)
+        return lv
+
+    def levels_with_comm(self) -> Dict[str, float]:
+        """Levels including edge weights on the path (a tighter priority)."""
+        lv: Dict[str, float] = {}
+        cm = self.child_map()
+        for n in reversed(self.topological_order()):
+            cs = cm[n]
+            lv[n] = self.t[n] + (
+                max(lv[c] + self.w[(n, c)] for c in cs) if cs else 0.0
+            )
+        return lv
+
+    def sequential_makespan(self) -> float:
+        """Makespan of the whole DAG on a single worker (no communication)."""
+        return float(sum(self.t[n] for n in self.nodes))
+
+    def critical_path_length(self, with_comm: bool = False) -> float:
+        lv = self.levels_with_comm() if with_comm else self.levels()
+        return max(lv.values()) if lv else 0.0
+
+    def max_parallelism(self) -> int:
+        """Maximum antichain width — the speedup plateau of paper Obs. 1.
+
+        Computed as the maximum, over a topological sweep, of concurrently
+        "open" nodes (nodes whose parents are all done but that are not
+        ancestors/descendants of each other).  Exact max-antichain is
+        NP-ish on general DAGs via Dilworth; we use the standard layered
+        approximation: max width over ASAP layers, which matches the paper's
+        usage (number of parallel branches).
+        """
+        pm = self.parent_map()
+        depth: Dict[str, int] = {}
+        for n in self.topological_order():
+            ps = pm[n]
+            depth[n] = 1 + max((depth[p] for p in ps), default=-1)
+        width: Dict[int, int] = {}
+        for n, d in depth.items():
+            width[d] = width.get(d, 0) + 1
+        return max(width.values()) if width else 0
+
+    def subgraph(self, keep: Iterable[str]) -> "DAG":
+        keep_set = set(keep)
+        nodes = tuple(n for n in self.nodes if n in keep_set)
+        edges = tuple(e for e in self.edges if e[0] in keep_set and e[1] in keep_set)
+        return DAG(
+            nodes=nodes,
+            edges=edges,
+            t={n: self.t[n] for n in nodes},
+            w={e: self.w[e] for e in edges},
+        )
+
+    def relabel(self, fn: Callable[[str], str]) -> "DAG":
+        return DAG(
+            nodes=tuple(fn(n) for n in self.nodes),
+            edges=tuple((fn(u), fn(v)) for (u, v) in self.edges),
+            t={fn(n): c for n, c in self.t.items()},
+            w={(fn(u), fn(v)): c for (u, v), c in self.w.items()},
+        )
+
+
+def density(dag: DAG) -> float:
+    """Edge density per paper eq. (14): |E| / (|V|(|V|-1)/2)."""
+    n = len(dag.nodes)
+    if n < 2:
+        return 0.0
+    return len(dag.edges) / (n * (n - 1) / 2.0)
+
+
+def random_dag(
+    n_nodes: int,
+    dens: float = 0.10,
+    seed: int = 0,
+    t_range: Tuple[float, float] = (1.0, 10.0),
+    w_range: Tuple[float, float] = (1.0, 10.0),
+    integer_costs: bool = True,
+    one_sink: bool = True,
+) -> DAG:
+    """Random DAG generator following the paper's three-step process (§4.1).
+
+    (1) nodes with unique indices; (2) edges from lower to higher indices to
+    guarantee acyclicity, sampled to hit the requested density; (3) single-sink
+    enforcement.  Costs/weights uniform in ``[1, 10]`` by default.
+    """
+    rng = _random.Random(seed)
+    names = [f"n{i}" for i in range(n_nodes)]
+    max_edges = n_nodes * (n_nodes - 1) // 2
+    target = min(max_edges, max(n_nodes - 1, round(dens * max_edges)))
+    all_pairs = [(names[i], names[j]) for i in range(n_nodes) for j in range(i + 1, n_nodes)]
+    # Ensure weak connectivity-ish: every non-first node gets >= 1 parent.
+    edges = set()
+    for j in range(1, n_nodes):
+        i = rng.randrange(j)
+        edges.add((names[i], names[j]))
+    remaining = [p for p in all_pairs if p not in edges]
+    rng.shuffle(remaining)
+    for p in remaining[: max(0, target - len(edges))]:
+        edges.add(p)
+
+    def draw(lo: float, hi: float) -> float:
+        if integer_costs:
+            return float(rng.randint(int(lo), int(hi)))
+        return rng.uniform(lo, hi)
+
+    t = {n: draw(*t_range) for n in names}
+    w = {e: draw(*w_range) for e in edges}
+    dag = DAG(nodes=tuple(names), edges=tuple(sorted(edges)), t=t, w=w)
+    if one_sink:
+        dag = dag.one_sink()
+    return dag

@@ -1,0 +1,308 @@
+"""Critical-path list scheduling heuristics: ISH and DSH (paper §3.3).
+
+Both follow Kruatrachue's framework: every node gets a *level* — the sum of
+node execution times along the longest path to the sink — and ready nodes are
+kept in a queue ordered by decreasing level.  Repeatedly, the head of the
+queue is placed on the worker minimizing its start time.
+
+* **ISH** (Insertion Scheduling Heuristic): if placing the head leaves an
+  idle gap on the chosen worker (typically a communication delay), try to
+  *insert* lower-level ready nodes into the gap without delaying the head.
+* **DSH** (Duplication Scheduling Heuristic): before placing, try to shrink
+  the start time by *duplicating* the binding ancestors onto the candidate
+  worker (recursively along the binding chain), committing the duplication
+  list only when the start time actually improves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.graph import DAG
+from repro.core.schedule import EPS, Instance, Schedule, remove_redundant_duplicates
+
+__all__ = ["ish", "dsh", "list_schedule"]
+
+
+# ---------------------------------------------------------------------- #
+# mutable scheduling state
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class _State:
+    dag: DAG
+    n_workers: int
+    free: List[float]
+    by_node: Dict[str, List[Instance]]
+    timeline: List[List[Instance]]
+    scheduled: set
+
+    @staticmethod
+    def fresh(dag: DAG, n_workers: int) -> "_State":
+        return _State(
+            dag=dag,
+            n_workers=n_workers,
+            free=[0.0] * n_workers,
+            by_node={},
+            timeline=[[] for _ in range(n_workers)],
+            scheduled=set(),
+        )
+
+    # -- placement ----------------------------------------------------- #
+    def place(self, node: str, worker: int, start: float, advance_free: bool = True) -> Instance:
+        inst = Instance(node=node, worker=worker, start=start)
+        self.by_node.setdefault(node, []).append(inst)
+        self.timeline[worker].append(inst)
+        fin = inst.finish(self.dag)
+        if advance_free:
+            self.free[worker] = max(self.free[worker], fin)
+        return inst
+
+    # -- queries -------------------------------------------------------- #
+    def arrival(self, u: str, consumer: str, worker: int) -> float:
+        """Earliest time u's data (for edge u->consumer) is usable on worker."""
+        we = self.dag.w[(u, consumer)]
+        return min(
+            iu.finish(self.dag) + (0.0 if iu.worker == worker else we)
+            for iu in self.by_node[u]
+        )
+
+    def data_ready(self, node: str, worker: int) -> float:
+        ps = self.dag.parents(node)
+        if not ps:
+            return 0.0
+        return max(self.arrival(u, node, worker) for u in ps)
+
+    def est(self, node: str, worker: int) -> float:
+        """Earliest start time by appending at the worker's free cursor."""
+        return max(self.free[worker], self.data_ready(node, worker))
+
+    def to_schedule(self) -> Schedule:
+        insts = tuple(
+            sorted(
+                (i for tl in self.timeline for i in tl),
+                key=lambda i: (i.worker, i.start),
+            )
+        )
+        return Schedule(n_workers=self.n_workers, instances=insts)
+
+
+def _ready_nodes(dag: DAG, scheduled: set, in_queue: set) -> List[str]:
+    out = []
+    pm = dag.parent_map()
+    for n in dag.nodes:
+        if n in scheduled or n in in_queue:
+            continue
+        if all(p in scheduled for p in pm[n]):
+            out.append(n)
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# ISH
+# ---------------------------------------------------------------------- #
+def _idle_segments(
+    state: _State, worker: int, lo: float, hi: float
+) -> List[Tuple[float, float]]:
+    """Idle intervals of ``worker``'s timeline intersected with [lo, hi)."""
+    busy = sorted(
+        (i.start, i.finish(state.dag))
+        for i in state.timeline[worker]
+        if i.finish(state.dag) > lo + EPS and i.start < hi - EPS
+    )
+    segs: List[Tuple[float, float]] = []
+    cur = lo
+    for (a, b) in busy:
+        if a > cur + EPS:
+            segs.append((cur, a))
+        cur = max(cur, b)
+    if hi > cur + EPS:
+        segs.append((cur, hi))
+    return segs
+
+
+def _insertion_step(
+    state: _State,
+    worker: int,
+    gap_start: float,
+    gap_end: float,
+    queue: List[str],
+    levels: Dict[str, float],
+) -> List[str]:
+    """Fill idle time in [gap_start, gap_end) on ``worker`` (paper Fig. 4).
+
+    Idle segments are recomputed from the worker timeline each round so that
+    instances already occupying part of the window (e.g. DSH duplicates) are
+    respected.  Returns the list of nodes inserted (removed from ``queue``).
+    """
+    inserted: List[str] = []
+    progress = True
+    while progress:
+        progress = False
+        segs = _idle_segments(state, worker, gap_start, gap_end)
+        for c in list(queue):  # queue is level-ordered; scan in order
+            for (a, b) in segs:
+                cs = max(a, state.data_ready(c, worker))
+                if cs + state.dag.t[c] <= b + EPS:
+                    state.place(c, worker, cs, advance_free=False)
+                    queue.remove(c)
+                    state.scheduled.add(c)
+                    inserted.append(c)
+                    progress = True
+                    break
+            if progress:
+                break
+    return inserted
+
+
+def ish(dag: DAG, n_workers: int) -> Schedule:
+    """Insertion Scheduling Heuristic."""
+    return list_schedule(dag, n_workers, duplicate=False)
+
+
+def dsh(dag: DAG, n_workers: int) -> Schedule:
+    """Duplication Scheduling Heuristic."""
+    return list_schedule(dag, n_workers, duplicate=True)
+
+
+# ---------------------------------------------------------------------- #
+# DSH duplication search
+# ---------------------------------------------------------------------- #
+def _dsh_start(
+    state: _State, node: str, worker: int
+) -> Tuple[float, List[Tuple[str, float]]]:
+    """Best achievable start of ``node`` on ``worker`` with duplication.
+
+    Kruatrachue's recursive duplication, iteratively: while ``node``'s start
+    is bound by a communication, walk **up** the binding-ancestor chain until
+    reaching an ancestor whose own inputs are already available on ``worker``
+    (it can be recomputed locally right away), tentatively duplicate it, and
+    re-evaluate.  The committed duplication list is the prefix realizing the
+    best start time observed.  Returns ``(start, dups)`` where ``dups`` is a
+    list of ``(node, start)`` copies to place on ``worker``.
+    """
+    dag = state.dag
+    cursor = state.free[worker]
+    tent: List[Tuple[str, float]] = []  # (node, start) tentatively on worker
+    tent_nodes: Dict[str, float] = {}  # node -> tentative finish
+
+    def arrival_t(u: str, consumer: str) -> float:
+        cands = []
+        if u in tent_nodes:
+            cands.append(tent_nodes[u])
+        we = dag.w[(u, consumer)]
+        for iu in state.by_node.get(u, []):
+            cands.append(iu.finish(dag) + (0.0 if iu.worker == worker else we))
+        return min(cands)
+
+    def ready_t(x: str) -> float:
+        ps = dag.parents(x)
+        if not ps:
+            return 0.0
+        return max(arrival_t(u, x) for u in ps)
+
+    def on_worker(u: str) -> bool:
+        if u in tent_nodes:
+            return True
+        return any(iu.worker == worker for iu in state.by_node.get(u, []))
+
+    best_start = max(cursor, ready_t(node))
+    best_prefix = 0  # number of tent entries realizing best_start
+
+    for _ in range(len(dag.nodes)):
+        if ready_t(node) <= cursor + EPS:
+            break  # no communication-induced idle gap remains
+        # walk up the binding-ancestor chain to a locally-recomputable node
+        x = node
+        dup_candidate: Optional[str] = None
+        visited = set()
+        while x not in visited:
+            visited.add(x)
+            ps = dag.parents(x)
+            if not ps:
+                break
+            u = max(ps, key=lambda u: arrival_t(u, x))
+            if on_worker(u):
+                # binding input is already local: x itself is the deepest
+                # duplicable ancestor (it waits only on local finishes)
+                if x is not node:
+                    dup_candidate = x
+                break
+            if ready_t(u) <= cursor + EPS:
+                dup_candidate = u  # recomputable on `worker` immediately
+                break
+            x = u  # u's own inputs are late; look further up the chain
+        if dup_candidate is None:
+            break
+        ds = max(cursor, ready_t(dup_candidate))
+        df = ds + dag.t[dup_candidate]
+        tent.append((dup_candidate, ds))
+        tent_nodes[dup_candidate] = df
+        cursor = max(cursor, df)
+        new_start = max(cursor, ready_t(node))
+        if new_start < best_start - EPS:
+            best_start = new_start
+            best_prefix = len(tent)
+
+    return best_start, tent[:best_prefix]
+
+
+# ---------------------------------------------------------------------- #
+# shared list-scheduling driver
+# ---------------------------------------------------------------------- #
+def list_schedule(
+    dag: DAG,
+    n_workers: int,
+    duplicate: bool = False,
+    insertion: bool = True,
+    prune_redundant: bool = True,
+) -> Schedule:
+    if n_workers < 1:
+        raise ValueError("need at least one worker")
+    levels = dag.levels()
+    state = _State.fresh(dag, n_workers)
+    queue: List[str] = []
+    in_queue: set = set()
+
+    def refresh_queue() -> None:
+        for n in _ready_nodes(dag, state.scheduled, in_queue):
+            queue.append(n)
+            in_queue.add(n)
+        queue.sort(key=lambda n: (-levels[n], n))
+
+    refresh_queue()
+    while queue:
+        v = queue.pop(0)
+        in_queue.discard(v)
+
+        if duplicate:
+            best = None
+            for p in range(n_workers):
+                s, dups = _dsh_start(state, v, p)
+                key = (s, len(dups), p)
+                if best is None or key < best[0]:
+                    best = (key, p, s, dups)
+            _, p, s, dups = best
+            gap_start = state.free[p]
+            for (dn, dstart) in dups:
+                state.place(dn, p, dstart)
+            s = max(state.free[p], state.data_ready(v, p))
+        else:
+            p = min(range(n_workers), key=lambda p: (state.est(v, p), p))
+            s = state.est(v, p)
+            gap_start = state.free[p]
+
+        inst = state.place(v, p, s)
+        state.scheduled.add(v)
+
+        # insertion step: fill the idle gap that scheduling v created
+        if insertion and s > gap_start + EPS:
+            _insertion_step(state, p, gap_start, s, queue, levels)
+            # rebuild in_queue after removals
+            in_queue.intersection_update(queue)
+
+        refresh_queue()
+
+    sched = state.to_schedule()
+    if duplicate and prune_redundant:
+        sched = remove_redundant_duplicates(sched, dag)
+    return sched

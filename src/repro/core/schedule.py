@@ -1,0 +1,211 @@
+"""Static multi-worker schedules (paper §2.3).
+
+A schedule is a tuple ``(Sc_1 ... Sc_m)`` of per-worker sub-schedules; each
+sub-schedule is a list of ``(node, start_time)`` pairs.  Nodes may be
+*duplicated* across workers to elide communication.  Validity (paper §2.3):
+
+  * no two instances overlap on one worker;
+  * an instance of ``v`` on worker ``j`` starts only once, for every parent
+    edge ``(u, v)``, some instance of ``u`` has finished — plus ``w(u,v)``
+    when that instance lives on a different worker (the executor always
+    reads from the *best* available instance, matching the improved
+    encoding's earliest-finish semantics, constraint (11));
+  * every node appears at least once, and at most once per worker.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.graph import DAG
+
+__all__ = ["Instance", "Schedule", "ScheduleError", "validate", "remove_redundant_duplicates"]
+
+EPS = 1e-9
+
+
+class ScheduleError(ValueError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Instance:
+    """One placed copy of a node."""
+
+    node: str
+    worker: int
+    start: float
+
+    def finish(self, dag: DAG) -> float:
+        return self.start + dag.t[self.node]
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Immutable schedule over ``n_workers`` workers."""
+
+    n_workers: int
+    instances: Tuple[Instance, ...]
+
+    # -------------------------------------------------------------- #
+    def sub_schedule(self, worker: int) -> Tuple[Instance, ...]:
+        return tuple(
+            sorted((i for i in self.instances if i.worker == worker), key=lambda i: i.start)
+        )
+
+    def instances_of(self, node: str) -> Tuple[Instance, ...]:
+        return tuple(i for i in self.instances if i.node == node)
+
+    def makespan(self, dag: DAG) -> float:
+        if not self.instances:
+            return 0.0
+        return max(i.finish(dag) for i in self.instances)
+
+    def workers_used(self) -> int:
+        return len({i.worker for i in self.instances})
+
+    def n_duplicates(self, dag: DAG) -> int:
+        return len(self.instances) - len(dag.nodes)
+
+    # -------------------------------------------------------------- #
+    def earliest_availability(self, dag: DAG, node: str, worker: int) -> float:
+        """Earliest time node's output is usable on ``worker``.
+
+        ``min`` over instances of ``finish + (0 if same worker else w)`` —
+        the executor picks the best source instance (improved-encoding
+        semantics; w is edge-dependent so the caller passes the edge weight
+        via :meth:`data_ready`).
+        """
+        raise NotImplementedError  # availability depends on the edge; use data_ready
+
+    def data_ready(self, dag: DAG, node: str, worker: int) -> float:
+        """Earliest start time of ``node`` on ``worker`` wrt data only."""
+        ready = 0.0
+        for u in dag.parents(node):
+            insts = self.instances_of(u)
+            if not insts:
+                raise ScheduleError(f"parent {u} of {node} unscheduled")
+            we = dag.w[(u, node)]
+            arrival = min(
+                i.finish(dag) + (0.0 if i.worker == worker else we) for i in insts
+            )
+            ready = max(ready, arrival)
+        return ready
+
+    def gantt(self, dag: DAG, width: int = 72) -> str:
+        """ASCII Gantt chart (debugging aid)."""
+        mk = self.makespan(dag) or 1.0
+        lines = []
+        for p in range(self.n_workers):
+            row = [" "] * width
+            for inst in self.sub_schedule(p):
+                a = int(inst.start / mk * (width - 1))
+                b = max(a + 1, int(inst.finish(dag) / mk * (width - 1)))
+                label = inst.node[: b - a]
+                for k in range(a, min(b, width)):
+                    row[k] = "#"
+                row[a : a + len(label)] = label
+            lines.append(f"P{p}|" + "".join(row) + "|")
+        return "\n".join(lines)
+
+
+def validate(schedule: Schedule, dag: DAG) -> None:
+    """Raise :class:`ScheduleError` unless the schedule is valid (paper §2.3)."""
+    seen_nodes = set()
+    per_worker: Dict[int, List[Instance]] = {}
+    for inst in schedule.instances:
+        if inst.node not in dag.t:
+            raise ScheduleError(f"unknown node {inst.node}")
+        if not (0 <= inst.worker < schedule.n_workers):
+            raise ScheduleError(f"worker {inst.worker} out of range")
+        if inst.start < -EPS:
+            raise ScheduleError(f"negative start for {inst}")
+        seen_nodes.add(inst.node)
+        per_worker.setdefault(inst.worker, []).append(inst)
+
+    missing = set(dag.nodes) - seen_nodes
+    if missing:
+        raise ScheduleError(f"nodes never scheduled: {sorted(missing)}")
+
+    # at most once per worker + no overlap on a worker
+    for p, insts in per_worker.items():
+        names = [i.node for i in insts]
+        if len(names) != len(set(names)):
+            raise ScheduleError(f"node duplicated within worker {p}")
+        insts = sorted(insts, key=lambda i: i.start)
+        for a, b in zip(insts, insts[1:]):
+            if a.finish(dag) > b.start + EPS:
+                raise ScheduleError(
+                    f"overlap on worker {p}: {a.node}[{a.start},{a.finish(dag)}) vs "
+                    f"{b.node}[{b.start},{b.finish(dag)})"
+                )
+
+    # precedence + communication
+    by_node: Dict[str, List[Instance]] = {}
+    for inst in schedule.instances:
+        by_node.setdefault(inst.node, []).append(inst)
+    for (u, v) in dag.edges:
+        we = dag.w[(u, v)]
+        for iv in by_node[v]:
+            arrival = min(
+                iu.finish(dag) + (0.0 if iu.worker == iv.worker else we)
+                for iu in by_node[u]
+            )
+            if arrival > iv.start + EPS:
+                raise ScheduleError(
+                    f"precedence violated: {v}@P{iv.worker} starts {iv.start} < "
+                    f"arrival {arrival} of {u}"
+                )
+
+
+def remove_redundant_duplicates(schedule: Schedule, dag: DAG) -> Schedule:
+    """Drop duplicate instances that supply no consumer (paper §2.3).
+
+    We walk backwards from each sink's best (earliest-finishing) instance,
+    marking, for every kept consumer instance and each of its parents, the
+    *supplier* instance actually used (the availability argmin).  Unmarked
+    instances are redundant and removed.  The result remains valid and has
+    an identical makespan contribution for every kept instance.
+    """
+    by_node: Dict[str, List[Instance]] = {}
+    for inst in schedule.instances:
+        by_node.setdefault(inst.node, []).append(inst)
+
+    keep: set = set()
+    stack: List[Instance] = []
+    for s in dag.sinks():
+        best = min(by_node[s], key=lambda i: i.finish(dag))
+        keep.add(best)
+        stack.append(best)
+
+    while stack:
+        iv = stack.pop()
+        for u in dag.parents(iv.node):
+            we = dag.w[(u, iv.node)]
+
+            def arrival(iu: Instance) -> float:
+                return iu.finish(dag) + (0.0 if iu.worker == iv.worker else we)
+
+            supplier = min(by_node[u], key=arrival)
+            if supplier not in keep:
+                keep.add(supplier)
+                stack.append(supplier)
+
+    kept = tuple(sorted(keep, key=lambda i: (i.worker, i.start)))
+    return Schedule(n_workers=schedule.n_workers, instances=kept)
+
+
+def single_worker_schedule(dag: DAG) -> Schedule:
+    """Sequential baseline: topological order on worker 0."""
+    t = 0.0
+    insts = []
+    for n in dag.topological_order():
+        insts.append(Instance(node=n, worker=0, start=t))
+        t += dag.t[n]
+    return Schedule(n_workers=1, instances=tuple(insts))
+
+
+def speedup(schedule: Schedule, dag: DAG) -> float:
+    """Paper eq. (15): single-worker makespan / schedule makespan."""
+    mk = schedule.makespan(dag)
+    return dag.sequential_makespan() / mk if mk > 0 else float("inf")

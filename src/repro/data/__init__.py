@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMDataset, Batch, prefetch
+
+__all__ = ["SyntheticLMDataset", "Batch", "prefetch"]

@@ -1,0 +1,119 @@
+"""Flash attention forward — Pallas TPU kernel.
+
+VMEM-tiled online softmax (Rabe-Staats/FlashAttention) adapted to the TPU
+grid model: the KV axis is the minormost grid dim, executed *sequentially*
+per (batch·head, q-block), so the running max/denominator/accumulator live
+in VMEM scratch across KV iterations — the TPU-idiomatic replacement for a
+CUDA thread-block loop with shared-memory staging.
+
+VMEM working set per program (f32):
+    q block:   block_q × D
+    k block:   block_k × D
+    v block:   block_k × D
+    acc:       block_q × D
+    m, l:      block_q × 2
+With block_q = block_k = 256, D = 128: (256·128·4)·4 + copies ≈ 0.8 MB ≪
+16 MB VMEM, leaving room for double buffering.  Block shapes are multiples
+of the (8, 128) f32 tile so the MXU matmuls are aligned.
+
+Causality is block-skipped: KV blocks entirely above the diagonal
+contribute nothing and are masked wholesale (compute is still issued per
+the static grid — on real TPU a grid-dimension mask would prune them;
+noted in DESIGN §7 as a follow-up).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, block_q: int, block_k: int,
+            seq_k: int, seq_q: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(F32)                       # [bq, D]
+    k = k_ref[0].astype(F32)                       # [bk, D]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=F32
+    ) * scale                                      # [bq, bk]
+
+    # causal mask on absolute positions (q offset aligns the diagonals when
+    # Sq != Sk, i.e. prefill continuation)
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(kpos <= qpos + (seq_k - seq_q), s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+    m_scr[...] = m_cur
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_ref[0].astype(F32), (((1,), (0,)), ((), ())),
+        preferred_element_type=F32,
+    )
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / l_scr[...][:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,            # [BH, Sq, D]
+    k: jax.Array,            # [BH, Sk, D]
+    v: jax.Array,            # [BH, Sk, D]
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    if Sq % block_q or Sk % block_k:
+        raise ValueError(f"seq lens ({Sq},{Sk}) must divide blocks ({block_q},{block_k})")
+    sc = scale if scale is not None else D ** -0.5
+    grid = (BH, Sq // block_q, Sk // block_k)
+    kernel = functools.partial(
+        _kernel, scale=sc, causal=causal, block_q=block_q, block_k=block_k,
+        seq_k=Sk, seq_q=Sq,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), F32),
+            pltpu.VMEM((block_q,), F32),
+            pltpu.VMEM((block_q, D), F32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

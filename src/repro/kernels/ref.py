@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [BH, Sq, D]
+    k: jax.Array,  # [BH, Sk, D]
+    v: jax.Array,  # [BH, Sk, D]
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    sc = scale if scale is not None else q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(F32), k.astype(F32)) * sc
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(Sk)[None, :] <= (jnp.arange(Sq)[:, None] + (Sk - Sq))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(F32)).astype(q.dtype)
+
+
+def ssd_scan_ref(
+    x: jax.Array,    # [BH, S, P]
+    dt: jax.Array,   # [BH, S]      (f32, post-softplus)
+    A: jax.Array,    # [BH]         (f32, negative)
+    B: jax.Array,    # [BH, S, N]
+    C: jax.Array,    # [BH, S, N]
+) -> jax.Array:
+    """Exact sequential SSD recurrence: h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_t."""
+    BH, S, P = x.shape
+    N = B.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        dA = jnp.exp(dtt * A)                              # [BH]
+        h = h * dA[:, None, None] + jnp.einsum(
+            "bp,bn,b->bpn", xt.astype(F32), Bt.astype(F32), dtt)
+        y = jnp.einsum("bn,bpn->bp", Ct.astype(F32), h)
+        return h, y
+
+    h0 = jnp.zeros((BH, P, N), F32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0)),
+    )
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)          # [BH, S, P]
+
+
+def swiglu_ref(x: jax.Array, wg: jax.Array, wu: jax.Array) -> jax.Array:
+    """silu(x @ wg) * (x @ wu), f32 accumulation."""
+    g = jnp.einsum("md,df->mf", x.astype(F32), wg.astype(F32))
+    u = jnp.einsum("md,df->mf", x.astype(F32), wu.astype(F32))
+    return (jax.nn.silu(g) * u).astype(x.dtype)

@@ -1,0 +1,83 @@
+"""Fused SwiGLU matmul — Pallas TPU kernel.
+
+Computes ``silu(x @ wg) * (x @ wu)`` in one pass: both gate and up
+projections share the x tile load (halving HBM reads of x vs two separate
+matmuls) and the silu·mul epilogue is fused into the final K-step, so the
+[M, F] intermediate never round-trips HBM — the classic fusion win for the
+FFN/MoE-expert hot path.
+
+Grid: (M/bm, F/bf, K/bk), K minormost (sequential) — two f32 accumulators
+live in VMEM scratch across K.  VMEM per program with bm=bf=256, bk=512:
+x 256·512·4 + wg/wu 2·512·256·4 + 2 acc 2·256·256·4 ≈ 2.1 MB.
+All dims multiples of (8, 128); MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["swiglu_matmul"]
+
+F32 = jnp.float32
+
+
+def _kernel(x_ref, wg_ref, wu_ref, o_ref, accg, accu):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        accg[...] = jnp.zeros_like(accg)
+        accu[...] = jnp.zeros_like(accu)
+
+    x = x_ref[...].astype(F32)
+    accg[...] += jax.lax.dot_general(
+        x, wg_ref[...].astype(F32), (((1,), (0,)), ((), ())),
+        preferred_element_type=F32)
+    accu[...] += jax.lax.dot_general(
+        x, wu_ref[...].astype(F32), (((1,), (0,)), ((), ())),
+        preferred_element_type=F32)
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        g = accg[...]
+        o_ref[...] = (g / (1.0 + jnp.exp(-g)) * accu[...]).astype(o_ref.dtype)
+
+
+def swiglu_matmul(
+    x: jax.Array,    # [M, D]
+    wg: jax.Array,   # [D, F]
+    wu: jax.Array,   # [D, F]
+    block_m: int = 256,
+    block_f: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    M, D = x.shape
+    F = wg.shape[1]
+    block_m = min(block_m, M)
+    block_f = min(block_f, F)
+    block_k = min(block_k, D)
+    if M % block_m or F % block_f or D % block_k:
+        raise ValueError(f"dims ({M},{D},{F}) must divide blocks "
+                         f"({block_m},{block_k},{block_f})")
+    grid = (M // block_m, F // block_f, D // block_k)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_f), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_k, block_f), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_f), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, F), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_f), F32),
+            pltpu.VMEM((block_m, block_f), F32),
+        ],
+        interpret=interpret,
+    )(x, wg, wu)

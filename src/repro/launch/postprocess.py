@@ -1,0 +1,47 @@
+"""Attach analytic roofline terms to existing dry-run artifacts in place
+(no recompiles — memory/collective-parse fields are reused as-is).
+
+    PYTHONPATH=src python -m repro.launch.postprocess [dir ...]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.configs import SHAPES, get_config
+from repro.launch.analysis import attach_analytic
+
+DEFAULT_DIRS = ("artifacts/dryrun", "artifacts/dryrun_baseline")
+
+
+def process(dirpath: str) -> int:
+    n = 0
+    for f in sorted(os.listdir(dirpath)):
+        if not f.endswith(".json"):
+            continue
+        path = os.path.join(dirpath, f)
+        with open(path) as fh:
+            rec = json.load(fh)
+        if "skipped" in rec or "error" in rec:
+            continue
+        cfg = get_config(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        dims = [int(x) for x in rec["mesh"].split("x")]
+        names = ("pod", "data", "model") if len(dims) == 3 else ("data", "model")
+        mesh_shape = dict(zip(names, dims))
+        attach_analytic(rec, cfg, shape, mesh_shape)
+        with open(path, "w") as fh:
+            json.dump(rec, fh, indent=1)
+        n += 1
+    return n
+
+
+def main() -> None:
+    dirs = sys.argv[1:] or [d for d in DEFAULT_DIRS if os.path.isdir(d)]
+    for d in dirs:
+        print(f"{d}: {process(d)} artifacts updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns abstract inputs for the step being
+lowered (train / prefill / decode) — weak-type-correct, shardable, with no
+device allocation.  ``cell_shardings`` resolves every operand tree's
+NamedShardings from the ParamDef logical axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import transformer as T
+from repro.models.frontends import frontend_token_split
+from repro.parallel.sharding import (
+    OPT_RULES,
+    SERVE_RULES,
+    TRAIN_RULES,
+    AxisRules,
+    logical_to_pspec,
+    tree_shardings,
+)
+
+__all__ = ["input_specs", "cell_shardings", "microbatches_for", "CellSpec"]
+
+
+def _batch_pspec(mesh: Mesh, ndim: int, dim_sizes) -> P:
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = ["batch"] + [None] * (ndim - 1)
+    return logical_to_pspec(axes, dim_sizes, TRAIN_RULES, shape)
+
+
+def microbatches_for(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> int:
+    """Gradient-accumulation depth: ~1 sequence per data shard per microbatch
+    for big models, 4 for small ones (keeps activation memory ≈ constant)."""
+    if shape.kind != "train":
+        return 1
+    mshape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = mshape.get("pod", 1) * mshape.get("data", 1)
+    per_shard = max(shape.global_batch // dp, 1)
+    seqs_per_micro = 4 if cfg.d_model < 2048 else 1
+    return max(1, per_shard // seqs_per_micro)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract inputs for the cell's step function."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        n_emb, n_txt = frontend_token_split(cfg, S)
+        out: Dict[str, Any] = {}
+        if n_emb:
+            out["embeds"] = jax.ShapeDtypeStruct((B, n_emb, cfg.d_model), jnp.bfloat16)
+        if n_txt:
+            out["tokens"] = jax.ShapeDtypeStruct((B, n_txt), jnp.int32)
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, n_txt if n_txt else n_emb), jnp.int32)
+        return out
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything jit.lower needs for one (arch × shape × mesh) cell."""
+    kind: str
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+
+
+def _sds_like(tree):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+        tree, is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "dtype"))
+
+
+def _batch_shardings(mesh: Mesh, inputs) -> Dict[str, NamedSharding]:
+    out = {}
+    for k, v in inputs.items():
+        out[k] = NamedSharding(mesh, _batch_pspec(mesh, len(v.shape), v.shape))
+    return out
+
+
+def cell_shardings(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> CellSpec:
+    defs = T.model_defs(cfg)
+    param_sh = tree_shardings(defs, TRAIN_RULES if shape.kind == "train" else SERVE_RULES, mesh)
+    params_sds = jax.tree.map(lambda d: d.abstract(), defs,
+                              is_leaf=lambda x: hasattr(x, "materialize"))
+    repl = NamedSharding(mesh, P())
+    inputs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt_sh = {
+            "m": tree_shardings(defs, OPT_RULES, mesh),
+            "v": tree_shardings(defs, OPT_RULES, mesh),
+            "step": repl,
+        }
+        opt_sds = {
+            "m": params_sds, "v": params_sds,
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        # moments stored f32 (bf16 for the 480B cell is a perf-pass change)
+        opt_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), opt_sds)
+        batch_sh = _batch_shardings(mesh, inputs)
+        metrics_sh = {k: repl for k in
+                      ("loss", "accuracy", "grad_norm", "lr")}
+        return CellSpec(
+            kind="train",
+            abstract_args=(params_sds, opt_sds, inputs),
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, metrics_sh),
+            donate_argnums=(0, 1),
+        )
+
+    cache_defs = T.cache_model_defs(cfg, shape.global_batch, shape.seq_len)
+    cache_sh = {"segments": tree_shardings(cache_defs, SERVE_RULES, mesh)["segments"],
+                "pos": repl}
+    cache_sds = T.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    batch_sh = _batch_shardings(mesh, inputs)
+
+    if shape.kind == "prefill":
+        logits_sh = NamedSharding(
+            mesh, _batch_pspec(mesh, 2, (shape.global_batch, cfg.vocab)))
+        return CellSpec(
+            kind="prefill",
+            abstract_args=(params_sds, cache_sds, inputs),
+            in_shardings=(param_sh, cache_sh, batch_sh),
+            out_shardings=(logits_sh, cache_sh),
+            donate_argnums=(1,),
+        )
+
+    logits_sh = NamedSharding(
+        mesh, _batch_pspec(mesh, 2, (shape.global_batch, cfg.vocab)))
+    return CellSpec(
+        kind="decode",
+        abstract_args=(params_sds, cache_sds, inputs["tokens"]),
+        in_shardings=(param_sh, cache_sh, batch_sh["tokens"]),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(1,),
+    )

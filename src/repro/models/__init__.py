@@ -1,0 +1,19 @@
+from repro.models.transformer import (
+    model_defs,
+    init_params,
+    abstract_params,
+    forward,
+    init_cache,
+    abstract_cache,
+    decode_step,
+)
+
+__all__ = [
+    "model_defs",
+    "init_params",
+    "abstract_params",
+    "forward",
+    "init_cache",
+    "abstract_cache",
+    "decode_step",
+]

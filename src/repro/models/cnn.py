@@ -1,0 +1,306 @@
+"""ACETONE-style layer-DAG CNN models (paper §2.2, §5).
+
+The paper's application model: each network layer is one schedulable task;
+the network is an explicit DAG of named layers.  We reproduce the paper's
+two evaluation networks:
+
+* **LeNet-5** (Fig. 1) and its *branchified* variant (Fig. 2: the first
+  conv/pool stage split into two parallel branches);
+* the **GoogLeNet-like** net of Fig. 10 (conv/pool stem + two inception
+  modules with 4 parallel branches each + avgpool/gemm head).
+
+Each :class:`LayerSpec` is a pure op over its parents' outputs; layer WCETs
+``t(v)`` and edge transfer costs ``w(e)`` come from the roofline cost model,
+standing in for the paper's OTAWA bounds (DESIGN §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costmodel import (
+    HardwareSpec,
+    OpCost,
+    TPU_V5E,
+    conv2d_cost,
+    dense_cost,
+    elementwise_cost,
+    pool2d_cost,
+)
+from repro.core.graph import DAG
+
+__all__ = [
+    "LayerSpec",
+    "CNNModel",
+    "lenet5",
+    "lenet5_branchy",
+    "inception_net",
+    "apply_layer",
+    "run_sequential",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One ACETONE layer: op + static attributes + parent layer names."""
+
+    name: str
+    op: str                      # input|conv|maxpool|avgpool|dense|concat|split|reshape|output
+    inputs: Tuple[str, ...]
+    out_shape: Tuple[int, ...]   # per-sample (no batch dim)
+    attrs: Mapping[str, object] = dataclasses.field(default_factory=dict)
+
+    def cost(self) -> OpCost:
+        a = dict(self.attrs)
+        if self.op == "conv":
+            h, w, cin = a["in_shape"]
+            return conv2d_cost(h, w, cin, a["features"], a["kernel"], a["kernel"],
+                               stride=a.get("stride", 1))
+        if self.op in ("maxpool", "avgpool"):
+            h, w, c = a["in_shape"]
+            return pool2d_cost(h, w, c, a.get("kernel", 2), stride=a.get("stride", 2))
+        if self.op == "dense":
+            return dense_cost(a["in_features"], a["features"])
+        if self.op in ("concat", "split", "input", "output"):
+            n = int(np.prod(self.out_shape))
+            return elementwise_cost(n, flops_per_elem=0.0)
+        if self.op == "reshape":
+            return OpCost(0.0, 0.0)  # paper Table 1: reshape WCET = 0
+        raise ValueError(self.op)
+
+    def out_bytes(self, dtype_bytes: int = 4) -> float:
+        return float(np.prod(self.out_shape)) * dtype_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNModel:
+    name: str
+    layers: Tuple[LayerSpec, ...]  # topological order
+
+    def spec(self, name: str) -> LayerSpec:
+        for l in self.layers:
+            if l.name == name:
+                return l
+        raise KeyError(name)
+
+    # -------------------------------------------------------------- #
+    def init_params(self, key: jax.Array) -> Dict[str, Dict[str, jax.Array]]:
+        params: Dict[str, Dict[str, jax.Array]] = {}
+        for l in self.layers:
+            k = jax.random.fold_in(key, hash(l.name) % (2**31))
+            if l.op == "conv":
+                a = l.attrs
+                cin = a["in_shape"][2]
+                wshape = (a["kernel"], a["kernel"], cin, a["features"])
+                params[l.name] = {
+                    "w": jax.random.normal(k, wshape, jnp.float32)
+                    / np.sqrt(a["kernel"] * a["kernel"] * cin),
+                    "b": jnp.zeros((a["features"],), jnp.float32),
+                }
+            elif l.op == "dense":
+                a = l.attrs
+                wshape = (a["in_features"], a["features"])
+                params[l.name] = {
+                    "w": jax.random.normal(k, wshape, jnp.float32)
+                    / np.sqrt(a["in_features"]),
+                    "b": jnp.zeros((a["features"],), jnp.float32),
+                }
+        return params
+
+    # -------------------------------------------------------------- #
+    def to_dag(self, hw: HardwareSpec = TPU_V5E, time_unit: float = 1e-9) -> DAG:
+        """Cost-annotated task DAG (t in ``time_unit`` seconds)."""
+        t = {l.name: max(l.cost().time(hw) / time_unit, 1e-3) for l in self.layers}
+        edges = []
+        w = {}
+        for l in self.layers:
+            for p in self.inputs_of(l.name):
+                e = (p, l.name)
+                edges.append(e)
+                src = self.spec(p)
+                w[e] = hw.comm_time(src.out_bytes()) / time_unit
+        return DAG.build(
+            nodes=tuple(l.name for l in self.layers), edges=tuple(edges), t=t, w=w
+        )
+
+    def inputs_of(self, name: str) -> Tuple[str, ...]:
+        return self.spec(name).inputs
+
+
+# --------------------------------------------------------------------------- #
+# op semantics (batched NHWC)
+# --------------------------------------------------------------------------- #
+def apply_layer(
+    spec: LayerSpec,
+    params: Mapping[str, Mapping[str, jax.Array]],
+    inputs: Sequence[jax.Array],
+) -> jax.Array:
+    a = dict(spec.attrs)
+    if spec.op == "input":
+        (x,) = inputs
+        return x
+    if spec.op == "conv":
+        (x,) = inputs
+        s = a.get("stride", 1)
+        y = jax.lax.conv_general_dilated(
+            x, params[spec.name]["w"], (s, s), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + params[spec.name]["b"]
+        return jax.nn.relu(y)
+    if spec.op in ("maxpool", "avgpool"):
+        (x,) = inputs
+        k = a.get("kernel", 2)
+        s = a.get("stride", 2)
+        if spec.op == "maxpool":
+            return jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, s, s, 1), "SAME"
+            )
+        y = jax.lax.reduce_window(
+            x, 0.0, jax.lax.add, (1, k, k, 1), (1, s, s, 1), "SAME"
+        )
+        return y / (k * k)
+    if spec.op == "dense":
+        (x,) = inputs
+        y = x @ params[spec.name]["w"] + params[spec.name]["b"]
+        return jax.nn.relu(y) if a.get("relu", True) else y
+    if spec.op == "concat":
+        return jnp.concatenate(list(inputs), axis=-1)
+    if spec.op == "split":
+        (x,) = inputs
+        lo, hi = a["channels"]
+        return x[..., lo:hi]
+    if spec.op == "reshape":
+        (x,) = inputs
+        return x.reshape(x.shape[0], -1)
+    if spec.op == "output":
+        (x,) = inputs
+        return x
+    raise ValueError(spec.op)
+
+
+def run_sequential(
+    model: CNNModel,
+    params: Mapping[str, Mapping[str, jax.Array]],
+    x: jax.Array,
+) -> jax.Array:
+    """Reference execution in topological order (ACETONE's sequential code)."""
+    vals: Dict[str, jax.Array] = {}
+    for l in model.layers:
+        ins = [x] if l.op == "input" else [vals[p] for p in l.inputs]
+        vals[l.name] = apply_layer(l, params, ins)
+    return vals[model.layers[-1].name]
+
+
+# --------------------------------------------------------------------------- #
+# model builders
+# --------------------------------------------------------------------------- #
+def _conv(name, parent, in_shape, features, kernel, stride=1) -> LayerSpec:
+    h, w, _ = in_shape
+    out = (h // stride, w // stride, features)
+    return LayerSpec(name, "conv", (parent,), out,
+                     {"in_shape": in_shape, "features": features,
+                      "kernel": kernel, "stride": stride})
+
+
+def _pool(name, op, parent, in_shape, kernel=2, stride=2) -> LayerSpec:
+    h, w, c = in_shape
+    out = ((h + stride - 1) // stride, (w + stride - 1) // stride, c)
+    return LayerSpec(name, op, (parent,), out,
+                     {"in_shape": in_shape, "kernel": kernel, "stride": stride})
+
+
+def _dense(name, parent, n_in, n_out, relu=True) -> LayerSpec:
+    return LayerSpec(name, "dense", (parent,), (n_out,),
+                     {"in_features": n_in, "features": n_out, "relu": relu})
+
+
+def lenet5(input_hw: int = 28) -> CNNModel:
+    """Sequential LeNet-5 (paper Fig. 1)."""
+    s = input_hw
+    ls: List[LayerSpec] = [LayerSpec("input", "input", (), (s, s, 1))]
+    ls.append(_conv("conv1", "input", (s, s, 1), 6, 5))
+    ls.append(_pool("pool1", "maxpool", "conv1", (s, s, 6)))
+    s2 = s // 2
+    ls.append(_conv("conv2", "pool1", (s2, s2, 6), 16, 5))
+    ls.append(_pool("pool2", "maxpool", "conv2", (s2, s2, 16)))
+    s4 = s2 // 2
+    flat = s4 * s4 * 16
+    ls.append(LayerSpec("flatten", "reshape", ("pool2",), (flat,)))
+    ls.append(_dense("dense1", "flatten", flat, 120))
+    ls.append(_dense("dense2", "dense1", 120, 84))
+    ls.append(_dense("dense3", "dense2", 84, 10, relu=False))
+    ls.append(LayerSpec("output", "output", ("dense3",), (10,)))
+    return CNNModel("lenet5", tuple(ls))
+
+
+def lenet5_branchy(input_hw: int = 28) -> CNNModel:
+    """Branchified LeNet-5 (paper Fig. 2): first conv/pool stage split in two."""
+    s = input_hw
+    ls: List[LayerSpec] = [LayerSpec("input", "input", (), (s, s, 1))]
+    # the split duplicates the single input channel to both branches
+    ls.append(LayerSpec("split_top", "split", ("input",), (s, s, 1), {"channels": (0, 1)}))
+    ls.append(LayerSpec("split_bot", "split", ("input",), (s, s, 1), {"channels": (0, 1)}))
+    ls.append(_conv("conv1_top", "split_top", (s, s, 1), 3, 5))
+    ls.append(_conv("conv1_bot", "split_bot", (s, s, 1), 3, 5))
+    ls.append(_pool("pool1_top", "maxpool", "conv1_top", (s, s, 3)))
+    ls.append(_pool("pool1_bot", "maxpool", "conv1_bot", (s, s, 3)))
+    s2 = s // 2
+    ls.append(LayerSpec("concat", "concat", ("pool1_top", "pool1_bot"), (s2, s2, 6)))
+    ls.append(_conv("conv2", "concat", (s2, s2, 6), 16, 5))
+    ls.append(_pool("pool2", "maxpool", "conv2", (s2, s2, 16)))
+    s4 = s2 // 2
+    flat = s4 * s4 * 16
+    ls.append(LayerSpec("flatten", "reshape", ("pool2",), (flat,)))
+    ls.append(_dense("dense1", "flatten", flat, 120))
+    ls.append(_dense("dense2", "dense1", 120, 84))
+    ls.append(_dense("dense3", "dense2", 84, 10, relu=False))
+    ls.append(LayerSpec("output", "output", ("dense3",), (10,)))
+    return CNNModel("lenet5_branchy", tuple(ls))
+
+
+def _inception(ls: List[LayerSpec], tag: str, parent: str, in_shape,
+               f_a: int, f_b1: int, f_b2: int, f_c1: int, f_c2: int, f_d: int):
+    """GoogLeNet inception module (paper Fig. 10 right box): 4 branches."""
+    h, w, _ = in_shape
+    ls.append(_conv(f"{tag}/conv_a", parent, in_shape, f_a, 1))
+    ls.append(_conv(f"{tag}/conv_b1", parent, in_shape, f_b1, 1))
+    ls.append(_conv(f"{tag}/conv_b2", f"{tag}/conv_b1", (h, w, f_b1), f_b2, 3))
+    ls.append(_conv(f"{tag}/conv_c1", parent, in_shape, f_c1, 1))
+    ls.append(_conv(f"{tag}/conv_c2", f"{tag}/conv_c1", (h, w, f_c1), f_c2, 5))
+    ls.append(_pool(f"{tag}/maxpool", "maxpool", parent, in_shape, kernel=3, stride=1))
+    ls.append(_conv(f"{tag}/conv_d", f"{tag}/maxpool", in_shape, f_d, 1))
+    cout = f_a + f_b2 + f_c2 + f_d
+    ls.append(LayerSpec(
+        f"{tag}/concat", "concat",
+        (f"{tag}/conv_a", f"{tag}/conv_b2", f"{tag}/conv_c2", f"{tag}/conv_d"),
+        (h, w, cout),
+    ))
+    return (h, w, cout)
+
+
+def inception_net(input_hw: int = 224, n_classes: int = 10) -> CNNModel:
+    """The GoogLeNet-like network of paper Fig. 10 / Tables 1-3."""
+    s = input_hw
+    ls: List[LayerSpec] = [LayerSpec("input", "input", (), (s, s, 3))]
+    ls.append(_conv("conv_1", "input", (s, s, 3), 64, 7, stride=2))
+    s = s // 2
+    ls.append(_pool("maxpool_1", "maxpool", "conv_1", (s, s, 64), kernel=3, stride=2))
+    s = (s + 1) // 2
+    ls.append(_conv("conv_2", "maxpool_1", (s, s, 64), 192, 3))
+    ls.append(_pool("maxpool_2", "maxpool", "conv_2", (s, s, 192), kernel=3, stride=2))
+    s = (s + 1) // 2
+    shape = _inception(ls, "inception_1", "maxpool_2", (s, s, 192),
+                       64, 96, 128, 16, 32, 32)
+    shape = _inception(ls, "inception_2", f"inception_1/concat", shape,
+                       128, 128, 192, 32, 96, 64)
+    h, w, c = shape
+    ls.append(_pool("avgpool", "avgpool", "inception_2/concat", shape,
+                    kernel=h, stride=h))
+    ls.append(LayerSpec("reshape", "reshape", ("avgpool",), (c,)))
+    ls.append(_dense("gemm", "reshape", c, n_classes, relu=False))
+    ls.append(LayerSpec("output", "output", ("gemm",), (n_classes,)))
+    return CNNModel("inception", tuple(ls))

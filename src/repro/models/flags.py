@@ -1,0 +1,47 @@
+"""Trace-time flags.
+
+``UNROLL_SCANS`` — when True, every internal ``lax.scan`` (layer stack,
+attention q-chunks, MoE token chunks, SSD chunk recurrence) is fully
+unrolled at trace time.  Used ONLY by the roofline probe lowerings:
+XLA's ``cost_analysis`` counts while-loop bodies once, so probes must be
+loop-free for their FLOP/byte counts to be exact.  Never enable for real
+execution (HLO size explodes with depth).
+"""
+from __future__ import annotations
+
+import contextlib
+
+UNROLL_SCANS = False
+
+# bf16-in / f32-accumulate matmuls (MXU semantics).  The CPU backend can
+# compile but not execute mixed bf16->f32 dots, so this is enabled for the
+# TPU target and for dry-run lowerings (never executed), and falls back to
+# f32 operand casts for CPU execution (tests/examples).
+PREFER_MXU = False
+
+
+def unroll(n: int) -> int:
+    """Scan unroll factor to use for a loop of length ``n``."""
+    return n if UNROLL_SCANS else 1
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    global UNROLL_SCANS
+    prev = UNROLL_SCANS
+    UNROLL_SCANS = True
+    try:
+        yield
+    finally:
+        UNROLL_SCANS = prev
+
+
+@contextlib.contextmanager
+def mxu_einsums():
+    global PREFER_MXU
+    prev = PREFER_MXU
+    PREFER_MXU = True
+    try:
+        yield
+    finally:
+        PREFER_MXU = prev

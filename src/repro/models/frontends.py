@@ -1,0 +1,58 @@
+"""Modality frontend STUBS (per the brief).
+
+``[audio]`` / ``[vlm]`` architectures specify the transformer backbone only;
+the frontend supplies *precomputed* frame/patch embeddings.  These helpers
+generate deterministic synthetic embeddings with the right shapes/dtypes and
+describe the ShapeDtypeStructs the dry-run needs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+# LLaVA-NeXT anyres: base 24x24 grid + up to 4 tiles -> we stub one image as
+# a fixed 576-token row prepended to the text tokens.
+VLM_IMAGE_TOKENS = 576
+
+
+def frontend_token_split(cfg: ArchConfig, seq_len: int) -> Tuple[int, int]:
+    """(n_embed_tokens, n_text_tokens) for a total sequence of ``seq_len``."""
+    if cfg.frontend == "audio":
+        return seq_len, 0               # encoder consumes frames only
+    if cfg.frontend == "vlm":
+        n_img = min(VLM_IMAGE_TOKENS, seq_len // 2)
+        return n_img, seq_len - n_img
+    return 0, seq_len
+
+
+def synth_inputs(
+    cfg: ArchConfig, batch: int, seq_len: int, seed: int = 0
+) -> Dict[str, Optional[jax.Array]]:
+    """Deterministic synthetic inputs for smoke tests / examples."""
+    n_emb, n_txt = frontend_token_split(cfg, seq_len)
+    key = jax.random.PRNGKey(seed)
+    out: Dict[str, Optional[jax.Array]] = {}
+    if n_emb:
+        out["embeds"] = (
+            jax.random.normal(key, (batch, n_emb, cfg.d_model), jnp.float32) * 0.02
+        ).astype(jnp.bfloat16)
+    if n_txt:
+        out["tokens"] = jax.random.randint(
+            jax.random.fold_in(key, 1), (batch, n_txt), 0, cfg.vocab, jnp.int32
+        )
+    return out
+
+
+def input_structs(cfg: ArchConfig, batch: int, seq_len: int):
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    n_emb, n_txt = frontend_token_split(cfg, seq_len)
+    out = {}
+    if n_emb:
+        out["embeds"] = jax.ShapeDtypeStruct((batch, n_emb, cfg.d_model), jnp.bfloat16)
+    if n_txt:
+        out["tokens"] = jax.ShapeDtypeStruct((batch, n_txt), jnp.int32)
+    return out

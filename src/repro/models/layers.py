@@ -1,0 +1,468 @@
+"""Building blocks: norms, rope, GQA / MLA attention, SwiGLU, MoE.
+
+Pure functional JAX — parameters are pytrees of arrays, their shapes and
+logical sharding axes declared once as :class:`ParamDef` trees (DESIGN §3).
+All attention uses *chunked* (flash-style) softmax over query blocks so the
+[S, S] score matrix is never materialized; MoE uses chunked GShard one-hot
+dispatch by default with a zero-FLOP sort/scatter variant for the perf pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MLASpec, MoESpec
+from repro.parallel.sharding import ParamDef
+
+F32 = jnp.float32
+
+
+def mxu_einsum(spec: str, a: jax.Array, b: jax.Array) -> jax.Array:
+    """bf16-operand, f32-accumulation matmul (§Perf i3).
+
+    On the TPU target (and in dry-run lowerings) this is a single MXU dot
+    with ``preferred_element_type=f32`` — no f32 copies of the operands.
+    The CPU runtime cannot execute mixed bf16->f32 dots, so tests fall back
+    to f32 casts there (numerically equal up to bf16 rounding order).
+    """
+    from repro.models import flags
+
+    if flags.PREFER_MXU or jax.default_backend() == "tpu":
+        return jnp.einsum(spec, a, b, preferred_element_type=F32)
+    return jnp.einsum(spec, a.astype(F32), b.astype(F32))
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+def rmsnorm_defs(d: int) -> Dict[str, ParamDef]:
+    return {"scale": ParamDef((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(p, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(F32)).astype(x.dtype)
+
+
+def head_rmsnorm(scale, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """qk-norm: rmsnorm over the head_dim axis (qwen3)."""
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(F32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# rotary embeddings
+# --------------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [D/2]
+    ang = positions[..., :, None, None].astype(F32) * freqs  # [..., S, 1, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# chunked (flash-style) attention — jnp reference used inside models
+# --------------------------------------------------------------------------- #
+def chunked_attention(
+    q: jax.Array,          # [B, Sq, H, D]
+    k: jax.Array,          # [B, Sk, KV, D]
+    v: jax.Array,          # [B, Sk, KV, Dv]
+    causal: bool,
+    q_chunk: int = 1024,
+    q_offset: int = 0,     # absolute position of q[0] (prefill continuation)
+    kv_len: Optional[jax.Array] = None,  # valid k/v prefix: scalar or [B] (decode)
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Numerically-stable attention scanning over query chunks.
+
+    Never materializes [Sq, Sk]; peak is [B, H, q_chunk, Sk].  GQA folds the
+    query-head group into the batch of the einsum.
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KV
+    sc = scale if scale is not None else D ** -0.5
+    q = q.reshape(B, Sq, KV, G, D)
+    kpos = jnp.arange(Sk)
+
+    q_chunk = min(q_chunk, Sq)
+    pad = (-Sq) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    n_chunks = q.shape[1] // q_chunk
+    qc = q.reshape(B, n_chunks, q_chunk, KV, G, D)
+    qc = jnp.moveaxis(qc, 1, 0)  # [n_chunks, B, q_chunk, KV, G, D]
+
+    def one_chunk(ci, qi):
+        # qi: [B, C, KV, G, D].  bf16 operands + f32 accumulation
+        # (preferred_element_type) — never materializes f32 copies of the
+        # full K/V (§Perf i3); matches MXU semantics on the real target.
+        s = mxu_einsum("bckgd,bskd->bckgs", qi, k) * sc  # [B, C, KV, G, Sk]
+        qpos = q_offset + ci * q_chunk + jnp.arange(q_chunk)
+        mask = jnp.ones((q_chunk, Sk), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        if kv_len is not None:
+            klen = jnp.asarray(kv_len)
+            if klen.ndim == 0:
+                s = jnp.where(kpos[None, None, None, None, :] < klen, s, -1e30)
+            else:  # per-sequence lengths [B]
+                s = jnp.where(
+                    kpos[None, None, None, None, :] < klen[:, None, None, None, None],
+                    s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = mxu_einsum("bckgs,bskd->bckgd", p, v)
+        return o.astype(v.dtype)  # [B, C, KV, G, Dv]
+
+    from repro.models import flags
+
+    _, out = jax.lax.scan(
+        lambda _c, args: (None, one_chunk(*args)),
+        None, (jnp.arange(n_chunks), qc), unroll=flags.unroll(n_chunks))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, n_chunks * q_chunk, KV, G, Dv)
+    if pad:
+        out = out[:, :Sq]
+    return out.reshape(B, Sq, H, Dv)
+
+
+# --------------------------------------------------------------------------- #
+# GQA attention
+# --------------------------------------------------------------------------- #
+def attention_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    # "qk" (head_dim) is the TP fallback axis: GQA head counts (40, 56, 14…)
+    # rarely divide a 16-way model axis, head_dim=128 always does.  The rules
+    # decide which of heads/qk actually binds per policy + divisibility.
+    out: Dict[str, Any] = {
+        "wq": ParamDef((d, H, Dh), ("embed", "heads", "qk")),
+        "wk": ParamDef((d, KV, Dh), ("embed", "kv_heads", "qk")),
+        "wv": ParamDef((d, KV, Dh), ("embed", "kv_heads", "qk")),
+        "wo": ParamDef((H, Dh, d), ("heads", "qk", "embed")),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = ParamDef((H, Dh), ("heads", None), init="zeros")
+        out["bk"] = ParamDef((KV, Dh), ("kv_heads", None), init="zeros")
+        out["bv"] = ParamDef((KV, Dh), ("kv_heads", None), init="zeros")
+    if cfg.qk_norm:
+        out["q_norm"] = ParamDef((Dh,), (None,), init="ones")
+        out["k_norm"] = ParamDef((Dh,), (None,), init="ones")
+    return out
+
+
+def attention_qkv(p, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = head_rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = head_rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.rope_theta is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_full(p, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Train/prefill attention over the whole sequence (no cache returned)."""
+    from repro.parallel.sharding import TRAIN_RULES, constrain
+
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = attention_qkv(p, cfg, x, positions)
+    # shard the context axis so per-chunk scores [*, C, KV, G, S] split over
+    # `model` even when head counts don't divide the mesh
+    k = constrain(k, ("batch", "kvseq", None, None), TRAIN_RULES)
+    v = constrain(v, ("batch", "kvseq", None, None), TRAIN_RULES)
+    o = chunked_attention(q, k, v, causal=cfg.causal, q_chunk=cfg.attn_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def attention_prefill(p, cfg: ArchConfig, x: jax.Array, cache: Dict[str, jax.Array]):
+    """Prefill: run full attention and write k/v into the cache."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = attention_qkv(p, cfg, x, positions)
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+    o = chunked_attention(q, k, v, causal=cfg.causal, q_chunk=cfg.attn_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache
+
+
+def cache_write(arr: jax.Array, val: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write the step-token entry ``val[:, 0]`` at position ``pos`` (scalar or
+    per-sequence [B] vector) of a [B, Smax, ...] cache array."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        idx = (0, pos) + (0,) * (arr.ndim - 2)
+        return jax.lax.dynamic_update_slice(arr, val.astype(arr.dtype), idx)
+    B = arr.shape[0]
+    return arr.at[jnp.arange(B), pos].set(val[:, 0].astype(arr.dtype))
+
+
+def _decode_positions(pos: jax.Array, batch: int) -> jax.Array:
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return jnp.broadcast_to(pos, (batch, 1))
+    return pos[:, None]
+
+
+def attention_decode(
+    p, cfg: ArchConfig, x: jax.Array, cache: Dict[str, jax.Array], pos: jax.Array
+):
+    """One-token decode against a [B, Smax, KV, D] cache; returns new cache.
+
+    ``pos`` may be a scalar (lockstep batch) or a per-sequence [B] vector
+    (continuous batching with ragged slot positions).
+    """
+    B = x.shape[0]
+    positions = _decode_positions(pos, B)
+    q, k, v = attention_qkv(p, cfg, x, positions)
+    cache = dict(cache)
+    ck = cache_write(cache["k"], k, pos)
+    cv = cache_write(cache["v"], v, pos)
+    cache["k"], cache["v"] = ck, cv
+    o = chunked_attention(
+        q, ck, cv, causal=False, q_chunk=1, kv_len=jnp.asarray(pos) + 1,
+    )
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache
+
+
+# --------------------------------------------------------------------------- #
+# MLA attention (DeepSeek-V2): latent-compressed KV
+# --------------------------------------------------------------------------- #
+def mla_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    dq = m.nope_head_dim + m.rope_head_dim
+    out: Dict[str, Any] = {
+        # queries (V2-Lite: full-rank)
+        "wq": ParamDef((d, H, dq), ("embed", "heads", None)),
+        # joint KV down-projection -> latent + decoupled rope key
+        "w_dkv": ParamDef((d, m.kv_lora_rank + m.rope_head_dim), ("embed", None)),
+        "kv_norm": ParamDef((m.kv_lora_rank,), (None,), init="ones"),
+        # up-projections from the latent
+        "w_uk": ParamDef((m.kv_lora_rank, H, m.nope_head_dim), (None, "heads", None)),
+        "w_uv": ParamDef((m.kv_lora_rank, H, m.v_head_dim), (None, "heads", None)),
+        "wo": ParamDef((H, m.v_head_dim, d), ("heads", None, "embed")),
+    }
+    return out
+
+
+def _mla_latent(p, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_kv, k_rope = dkv[..., : m.kv_lora_rank], dkv[..., m.kv_lora_rank:]
+    c_kv = rmsnorm({"scale": p["kv_norm"]}, c_kv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta or 1e4)
+    return c_kv, k_rope[:, :, 0, :]
+
+
+def _mla_queries(p, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta or 1e4)
+    return q_nope, q_rope
+
+
+def mla_attention_full(p, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Train/prefill MLA: expand per-head K/V from the latent, chunked attn."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    c_kv, k_rope = _mla_latent(p, cfg, x, positions)
+    q_nope, q_rope = _mla_queries(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+    vv = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (*k_nope.shape[:3], m.rope_head_dim))],
+        axis=-1,
+    )
+    sc = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    o = chunked_attention(q, k, vv, causal=cfg.causal, q_chunk=cfg.attn_chunk, scale=sc)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def mla_attention_prefill(p, cfg: ArchConfig, x: jax.Array, cache):
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    c_kv, k_rope = _mla_latent(p, cfg, x, positions)
+    cache = dict(cache)
+    cache["c_kv"] = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0))
+    cache["k_rope"] = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, 0, 0))
+    out = mla_attention_full(p, cfg, x)
+    return out, cache
+
+
+def mla_attention_decode(p, cfg: ArchConfig, x: jax.Array, cache, pos: jax.Array):
+    """Absorbed-matmul decode: score/combine directly in the latent space.
+
+    q_c = q_nope @ W_uk   -> [B,1,H,r];   scores = q_c · c_kv + q_rope · k_rope
+    o_c = probs · c_kv    -> [B,1,H,r];   out    = (o_c @ W_uv) @ W_o
+    The cache holds only the rank-r latent + rope key: (r + d_r) per token
+    instead of 2·H·Dh — the paper-relevant "duplication instead of transfer"
+    trade (recompute per-head K/V implicitly, never store them).
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    positions = _decode_positions(pos, B)
+    c_new, kr_new = _mla_latent(p, cfg, x, positions)
+    cache = dict(cache)
+    c_all = cache_write(cache["c_kv"], c_new, pos)
+    kr_all = cache_write(cache["k_rope"], kr_new, pos)
+    cache["c_kv"], cache["k_rope"] = c_all, kr_all
+
+    q_nope, q_rope = _mla_queries(p, cfg, x, positions)
+    q_c = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])  # absorb W_uk
+    s_lat = mxu_einsum("bshr,btr->bhst", q_c, c_all)
+    s_rope = mxu_einsum("bshk,btk->bhst", q_rope, kr_all)
+    sc = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    s = (s_lat + s_rope) * sc
+    posb = jnp.asarray(pos)
+    if posb.ndim == 0:
+        mask = jnp.arange(c_all.shape[1])[None, None, None, :] <= posb
+    else:
+        mask = jnp.arange(c_all.shape[1])[None, None, None, :] <= posb[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    prob = jax.nn.softmax(s, axis=-1).astype(c_all.dtype)
+    o_c = mxu_einsum("bhst,btr->bshr", prob, c_all).astype(x.dtype)
+    o = jnp.einsum("bshr,rhk->bshk", o_c, p["w_uv"])
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache
+
+
+# --------------------------------------------------------------------------- #
+# SwiGLU MLP
+# --------------------------------------------------------------------------- #
+def mlp_defs(d: int, f: int) -> Dict[str, ParamDef]:
+    return {
+        "wg": ParamDef((d, f), ("embed", "ffn")),
+        "wu": ParamDef((d, f), ("embed", "ffn")),
+        "wd": ParamDef((f, d), ("ffn", "embed")),
+    }
+
+
+def mlp(p, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"])
+    h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"])
+
+
+# --------------------------------------------------------------------------- #
+# Mixture of Experts
+# --------------------------------------------------------------------------- #
+def moe_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    # expert weights use dedicated logical axes (§Perf i5): `expert_ffn`
+    # maps to `data` as a TENSOR-parallel dim (activation psums), never the
+    # FSDP gather path — 480B of expert weights must stay resident, not be
+    # re-gathered every microbatch (was 38 s/step of all-gather for arctic)
+    out: Dict[str, Any] = {
+        "router": ParamDef((d, E), ("embed", "experts"), dtype=jnp.float32),
+        "wg": ParamDef((E, d, f), ("experts", "expert_embed", "expert_ffn")),
+        "wu": ParamDef((E, d, f), ("experts", "expert_embed", "expert_ffn")),
+        "wd": ParamDef((E, f, d), ("experts", "expert_ffn", "expert_embed")),
+    }
+    if m.n_shared:
+        out["shared"] = mlp_defs(d, m.n_shared * f)
+    if m.dense_residual:
+        out["residual"] = mlp_defs(d, cfg.d_ff)
+    return out
+
+
+def _moe_chunk_einsum(p, m: MoESpec, xc: jax.Array) -> jax.Array:
+    """GShard per-group one-hot dispatch: xc [G, s, D] -> [G, s, D].
+
+    Groups are sequences (the batch dim), so the capacity cumsum never
+    crosses the data-sharded axis and GSPMD keeps every einsum sharded:
+    g over ``data``, experts over ``model`` — the [G,s,E,C] dispatch tensor
+    and the [G,E,C,D] expert inputs are both 2-D sharded.  Capacity
+    C = ceil(top_k * s / E * capacity_factor) per group; overflow tokens are
+    dropped (combine weight zero), the classic TPU MoE baseline.  The FLOP
+    overhead of dispatch/combine is visible in MODEL_FLOPS/HLO_FLOPs and is
+    removed by the scatter variant (perf pass, DESIGN §7).
+    """
+    G, s, D = xc.shape
+    E, K = m.n_experts, m.top_k
+    C = max(1, int(K * s / E * m.capacity_factor + 0.999))
+    gates = jax.nn.softmax(
+        jnp.einsum("gsd,de->gse", xc.astype(F32), p["router"]), axis=-1)
+    gate_k, idx_k = jax.lax.top_k(gates, K)                      # [G, s, K]
+    gate_k = gate_k / jnp.clip(gate_k.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(idx_k, E, dtype=F32)                 # [G, s, K, E]
+    # position of each (token, k) within its expert queue, per group
+    pos = (jnp.cumsum(onehot.reshape(G, s * K, E), axis=1)
+           .reshape(G, s, K, E) * onehot - 1.0)
+    in_cap = (pos >= 0) & (pos < C)
+    dispatch = jax.nn.one_hot(pos, C, dtype=F32) * in_cap[..., None]  # [G,s,K,E,C]
+    combine = dispatch * gate_k[..., None, None]
+    # GSPMD propagation loses the group (data) sharding through the one-hot
+    # construction; pin the 2-D (group x expert) layout explicitly so the
+    # expert matmuls run [G/dp, E/tp]-local (found via probe HLO — §Perf i1)
+    from repro.parallel.sharding import TRAIN_RULES, constrain
+
+    disp = constrain(dispatch.sum(2), ("batch", None, "experts", None), TRAIN_RULES)
+    comb = constrain(combine.sum(2), ("batch", None, "experts", None), TRAIN_RULES)
+    xe = jnp.einsum("gsec,gsd->gecd", disp.astype(xc.dtype), xc)      # [G,E,C,D]
+    xe = constrain(xe, ("batch", "experts", None, None), TRAIN_RULES)
+    g = jnp.einsum("gecd,edf->gecf", xe, p["wg"])
+    u = jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+    h = jax.nn.silu(g.astype(F32)).astype(xc.dtype) * u
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wd"])                     # [G,E,C,D]
+    ye = constrain(ye, ("batch", "experts", None, None), TRAIN_RULES)
+    return jnp.einsum("gsec,gecd->gsd", comb.astype(xc.dtype), ye)
+
+
+def moe_layer(p, cfg: ArchConfig, x: jax.Array, impl: str = "einsum") -> jax.Array:
+    """Routed-experts layer, chunked over the sequence dim (batch stays a
+    sharded group axis throughout — see ``_moe_chunk_einsum``)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    chunk = min(m.router_chunk, S)
+    pad = (-S) % chunk
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+    n = xp.shape[1] // chunk
+    xs = jnp.moveaxis(xp.reshape(B, n, chunk, D), 1, 0)          # [n, B, chunk, D]
+    from repro.models import flags
+
+    if impl == "einsum":
+        fn = lambda c: _moe_chunk_einsum(p, m, c)
+    elif impl == "scatter":
+        from repro.models.moe_scatter import moe_chunk_scatter
+
+        fn = lambda c: moe_chunk_scatter(p, m, c)
+    else:
+        raise ValueError(f"unknown moe impl {impl!r}")
+    _, ys = jax.lax.scan(lambda _c, xc: (None, fn(xc)), None, xs,
+                         unroll=flags.unroll(n))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, xp.shape[1], D)[:, :S]
+    if m.n_shared:
+        y = y + mlp(p["shared"], x)
+    if m.dense_residual:
+        y = y + mlp(p["residual"], x)
+    return y

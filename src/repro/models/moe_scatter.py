@@ -1,0 +1,72 @@
+"""Zero-FLOP MoE dispatch (sort/scatter) — the beyond-paper perf variant.
+
+The GShard baseline dispatch (``_moe_chunk_einsum``) pays
+``2·T·(K·T·cf)·D`` FLOPs per chunk in the dispatch/combine one-hot matmuls.
+This variant replaces them with *data movement*: tokens are scattered into
+the per-expert capacity buffer by index (HLO scatter — bytes, not FLOPs)
+and gathered back for the weighted combine.  Expert compute is unchanged.
+Numerics match the einsum path exactly up to summation order (same
+capacity-dropping semantics: per-expert arrival order).
+
+Roofline effect (§Perf): removes the dispatch term from HLO_FLOPs entirely,
+raising MODEL_FLOPS/HLO_FLOPs; adds ~2·T·K·D scatter/gather bytes, which is
+negligible against the expert matmul bytes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoESpec
+
+F32 = jnp.float32
+
+__all__ = ["moe_chunk_scatter"]
+
+
+def moe_chunk_scatter(p, m: MoESpec, xc: jax.Array) -> jax.Array:
+    """Per-group scatter dispatch: xc [G, s, D] -> [G, s, D].
+
+    Same per-group capacity semantics as ``_moe_chunk_einsum`` (arrival order
+    = token-major within the group); the [s,E,C] one-hot matmuls are replaced
+    by index scatter/gather, vmapped over the (data-sharded) group axis.
+    """
+    G, s, D = xc.shape
+    E, K = m.n_experts, m.top_k
+    C = max(1, int(K * s / E * m.capacity_factor + 0.999))
+    gates = jax.nn.softmax(
+        jnp.einsum("gsd,de->gse", xc.astype(F32), p["router"]), axis=-1)
+    gate_k, idx_k = jax.lax.top_k(gates, K)                      # [G, s, K]
+    gate_k = gate_k / jnp.clip(gate_k.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(idx_k, E, dtype=jnp.int32)           # [G, s, K, E]
+    pos = (jnp.cumsum(onehot.reshape(G, s * K, E), axis=1)
+           .reshape(G, s, K, E) * onehot - 1)
+    pos = jnp.where(onehot > 0, pos, 0).sum(-1)                  # [G, s, K]
+    in_cap = pos < C
+    flat_idx = jnp.where(in_cap, idx_k * C + pos, E * C)         # [G, s, K]
+
+    def one_group(x_g, idx_g):
+        buf = jnp.zeros((E * C + 1, D), xc.dtype)
+        src = jnp.broadcast_to(x_g[:, None, :], (s, K, D)).reshape(s * K, D)
+        buf = buf.at[idx_g.reshape(-1)].set(src, mode="drop")
+        return buf[: E * C].reshape(E, C, D)
+
+    from repro.parallel.sharding import TRAIN_RULES, constrain
+
+    xe = jax.vmap(one_group)(xc, flat_idx)                       # [G, E, C, D]
+    xe = constrain(xe, ("batch", "experts", None, None), TRAIN_RULES)
+    g = jnp.einsum("gecd,edf->gecf", xe, p["wg"])
+    u = jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+    h = jax.nn.silu(g.astype(F32)).astype(xc.dtype) * u
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wd"])                # [G, E, C, D]
+    ye = constrain(ye, ("batch", "experts", None, None), TRAIN_RULES)
+
+    def gather_group(ye_g, idx_g):
+        flat = jnp.concatenate(
+            [ye_g.reshape(E * C, D), jnp.zeros((1, D), ye_g.dtype)], axis=0)
+        return flat[idx_g.reshape(-1)].reshape(s, K, D)
+
+    out_k = jax.vmap(gather_group)(ye, flat_idx)                 # [G, s, K, D]
+    wk = (gate_k * in_cap).astype(xc.dtype)
+    return jnp.einsum("gsk,gskd->gsd", wk, out_k)

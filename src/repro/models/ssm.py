@@ -1,0 +1,221 @@
+"""Mamba2 SSD (state-space duality) mixer — TPU-native chunked formulation.
+
+The selective-scan recurrence is evaluated in the *chunked dual form* of the
+mamba2 paper: within-chunk interactions become dense [Q, Q] matmuls (MXU
+work), inter-chunk state is carried by a short ``lax.scan`` over chunks.
+This is the hardware adaptation the brief asks for — on a CPU the natural
+implementation is the sequential recurrence; on TPU the chunk matmuls are.
+
+Decode runs the exact recurrence one token at a time against a
+``[B, H, P, N]`` state (+ a rolling conv window), so ``long_500k`` has O(1)
+per-token state — no KV cache at all.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import ParamDef
+
+F32 = jnp.float32
+
+
+def ssm_dims(cfg: ArchConfig) -> Tuple[int, int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    return d_in, n_heads, s.head_dim, s.d_state, s.n_groups
+
+
+def ssm_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, H, P, N, G = ssm_dims(cfg)
+    conv_ch = d_in + 2 * G * N
+    return {
+        "wz": ParamDef((d, d_in), ("embed", "ssm_inner")),
+        "wx": ParamDef((d, d_in), ("embed", "ssm_inner")),
+        "wB": ParamDef((d, G * N), ("embed", None)),
+        "wC": ParamDef((d, G * N), ("embed", None)),
+        "wdt": ParamDef((d, H), ("embed", "heads")),
+        "dt_bias": ParamDef((H,), ("heads",), dtype=F32, init="zeros"),
+        "A_log": ParamDef((H,), ("heads",), dtype=F32, init="zeros"),
+        "Dskip": ParamDef((H,), ("heads",), dtype=F32, init="ones"),
+        "conv_w": ParamDef((s.conv_width, conv_ch), (None, "ssm_inner"),
+                           scale=1.0 / s.conv_width),
+        "conv_b": ParamDef((conv_ch,), ("ssm_inner",), init="zeros"),
+        "norm": ParamDef((d_in,), ("ssm_inner",), init="ones"),
+        "wo": ParamDef((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _project(p, cfg: ArchConfig, x: jax.Array):
+    """x: [B,S,d] -> (z, xBC, dt) with xBC = concat(x_ssm, B, C)."""
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xs = jnp.einsum("bsd,de->bse", x, p["wx"])
+    Bm = jnp.einsum("bsd,de->bse", x, p["wB"])
+    Cm = jnp.einsum("bsd,de->bse", x, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"]).astype(F32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    xBC = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(p, xBC: jax.Array, carry: jax.Array = None):
+    """Depthwise causal conv over [B,S,CH]; carry: [B,w-1,CH] history."""
+    w = p["conv_w"].shape[0]
+    if carry is None:
+        carry = jnp.zeros((xBC.shape[0], w - 1, xBC.shape[-1]), xBC.dtype)
+    padded = jnp.concatenate([carry.astype(xBC.dtype), xBC], axis=1)
+    out = jnp.zeros_like(xBC, dtype=F32)
+    for i in range(w):
+        out = out + padded[:, i : i + xBC.shape[1]].astype(F32) * p["conv_w"][i].astype(F32)
+    out = jax.nn.silu(out + p["conv_b"].astype(F32)).astype(xBC.dtype)
+    new_carry = padded[:, padded.shape[1] - (w - 1):]
+    return out, new_carry
+
+
+def _ssd_chunked(
+    x: jax.Array,      # [B, S, H, P]
+    dt: jax.Array,     # [B, S, H]  (f32)
+    A: jax.Array,      # [H]        (f32, negative)
+    Bm: jax.Array,     # [B, S, G, N]
+    Cm: jax.Array,     # [B, S, G, N]
+    chunk: int,
+    h0: jax.Array = None,  # [B, H, P, N] initial state
+):
+    """Chunked SSD: returns (y [B,S,H,P], h_final [B,H,P,N])."""
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // Q
+    xc = x.reshape(B_, nc, Q, H, P)
+    dtc = dt.reshape(B_, nc, Q, H)
+    Bc = Bm.reshape(B_, nc, Q, G, N)
+    Cc = Cm.reshape(B_, nc, Q, G, N)
+
+    from repro.models import flags
+    from repro.parallel.sharding import TRAIN_RULES, constrain
+
+    xc = constrain(xc, ("batch", None, None, "heads", None), TRAIN_RULES)
+    if h0 is None:
+        h0 = jnp.zeros((B_, H, P, N), F32)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    gidx = jnp.arange(H) // rep
+
+    def one_chunk(h, inp):
+        """Process ONE chunk; all [Q, Q] transients live only per-step.
+
+        (§Perf i2: the vectorized-over-chunks formulation materialized
+        [B, nc, Q, Q, H] decay/score tensors — 160 GiB/dev of temps for
+        mamba2 train_4k.  Sequentializing the chunk dim bounds temps to one
+        chunk, exactly like the Pallas kernel's VMEM-carried state.)"""
+        xq, dtq, Bq, Cq = inp               # [B,Q,H,P] [B,Q,H] [B,Q,G,N] x2
+        dA = dtq * A                        # [B,Q,H]
+        cs = jnp.cumsum(dA, axis=1)
+        dsum = cs[:, -1]                    # [B,H]
+        li = cs[:, :, None, :]
+        lj = cs[:, None, :, :]
+        L = jnp.where(mask[None, :, :, None], jnp.exp(li - lj), 0.0)  # [B,i,j,H]
+        CB = jnp.einsum("bign,bjgn->bijg", Cq.astype(F32), Bq.astype(F32))
+        CBg = jnp.repeat(CB, rep, axis=-1) if G != H else CB
+        xdt = xq.astype(F32) * dtq[..., None]
+        y_d = jnp.einsum("bijh,bijh,bjhp->bihp", CBg, L, xdt)
+        # off-diagonal vs carried state
+        Cg = jnp.repeat(Cq, rep, axis=2) if G != H else Cq            # [B,Q,H,N]
+        y_o = jnp.einsum("bihn,bhpn,bih->bihp", Cg.astype(F32), h, jnp.exp(cs))
+        # state update
+        decay_in = jnp.exp(dsum[:, None, :] - cs)                     # [B,Q,H]
+        st = jnp.einsum("bjhp,bjgn,bjh->bhpgn", xq.astype(F32),
+                        Bq.astype(F32), dtq * decay_in)
+        st = jnp.take_along_axis(
+            st, gidx[None, :, None, None, None], axis=3)[:, :, :, 0, :]
+        h = h * jnp.exp(dsum)[:, :, None, None] + st
+        return h, (y_d + y_o)
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    h_final, ys = jax.lax.scan(one_chunk, h0.astype(F32), xs,
+                               unroll=flags.unroll(nc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, nc * Q, H, P)
+    if pad:
+        y = y[:, :S]
+    return y, h_final
+
+
+def ssm_block(p, cfg: ArchConfig, x: jax.Array, cache=None, pos=None, mode="full"):
+    """Full mamba2 mixer.  mode: full | prefill | decode."""
+    s = cfg.ssm
+    d_in, H, P, N, G = ssm_dims(cfg)
+    B_ = x.shape[0]
+
+    if mode == "decode":
+        # one-token recurrence
+        z, xBC, dt = _project(p, cfg, x)  # S == 1
+        conv_out, conv_carry = _causal_conv(p, xBC, cache["conv"])
+        xs = conv_out[..., :d_in]
+        Bm = conv_out[..., d_in : d_in + G * N].reshape(B_, 1, G, N)
+        Cm = conv_out[..., d_in + G * N :].reshape(B_, 1, G, N)
+        xh = xs.reshape(B_, 1, H, P)
+        A = -jnp.exp(p["A_log"])
+        dA = jnp.exp(dt[:, 0] * A)  # [B,H]
+        rep = H // G
+        Bh = jnp.repeat(Bm[:, 0], rep, axis=1) if G != H else Bm[:, 0]  # [B,H,N]
+        Ch = jnp.repeat(Cm[:, 0], rep, axis=1) if G != H else Cm[:, 0]
+        h = cache["ssd"].astype(F32)
+        h = h * dA[:, :, None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", xh[:, 0].astype(F32), Bh.astype(F32), dt[:, 0])
+        y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(F32), h)
+        y = y + p["Dskip"][None, :, None] * xh[:, 0].astype(F32)
+        y = y.reshape(B_, 1, d_in).astype(x.dtype)
+        new_cache = {"conv": conv_carry, "ssd": h}
+    else:
+        from repro.parallel.sharding import TRAIN_RULES, constrain
+
+        z, xBC, dt = _project(p, cfg, x)
+        xBC = constrain(xBC, ("batch", None, None), TRAIN_RULES)
+        conv_out, conv_carry = _causal_conv(p, xBC)
+        xs = conv_out[..., :d_in]
+        S = x.shape[1]
+        Bm = conv_out[..., d_in : d_in + G * N].reshape(B_, S, G, N)
+        Cm = conv_out[..., d_in + G * N :].reshape(B_, S, G, N)
+        xh = constrain(xs.reshape(B_, S, H, P),
+                       ("batch", None, "heads", None), TRAIN_RULES)
+        A = -jnp.exp(p["A_log"])
+        y, h_final = _ssd_chunked(xh, dt, A, Bm, Cm, chunk=s.chunk)
+        y = constrain(y, ("batch", None, "heads", None), TRAIN_RULES)
+        y = y + p["Dskip"][None, None, :, None] * xh.astype(F32)
+        y = y.reshape(B_, S, d_in).astype(x.dtype)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": conv_carry, "ssd": h_final}
+
+    # gated rmsnorm + output projection
+    g = y.astype(F32) * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm"].astype(F32)
+    out = jnp.einsum("bse,ed->bsd", g.astype(x.dtype), p["wo"])
+    return out, new_cache
+
+
+def ssm_cache_defs(cfg: ArchConfig, batch: int) -> Dict[str, ParamDef]:
+    s = cfg.ssm
+    d_in, H, P, N, G = ssm_dims(cfg)
+    conv_ch = d_in + 2 * G * N
+    return {
+        "conv": ParamDef((batch, s.conv_width - 1, conv_ch),
+                         ("batch", None, "ssm_inner"), dtype=jnp.bfloat16,
+                         init="zeros"),
+        "ssd": ParamDef((batch, H, P, N), ("batch", "heads", None, None),
+                        dtype=F32, init="zeros"),
+    }

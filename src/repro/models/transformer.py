@@ -1,0 +1,314 @@
+"""Model assembly for every assigned family (dense / moe / audio / ssm /
+hybrid / vlm).
+
+Layers are *stacked* — every repeated block's parameters carry a leading
+``[n]`` dim — and executed with ``lax.scan``, so the lowered HLO contains one
+block body regardless of depth (essential for 64-layer dry-run compiles).
+Heterogeneous stacks (deepseek's leading dense layer, jamba's 8-layer
+super-block) are expressed as *segments*: a list of (stacked defs, apply-fn)
+executed in order.
+
+Three entry points share parameters:
+
+* ``forward(..., mode="train")``   — full-sequence logits.
+* ``forward(..., mode="prefill")`` — logits + populated cache.
+* ``decode_step``                   — one token against the cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.parallel.sharding import ParamDef, abstract_tree, init_tree
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------- #
+# block defs / apply per layer kind
+# --------------------------------------------------------------------------- #
+def _attn_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    mix = L.mla_defs(cfg) if cfg.mla is not None else L.attention_defs(cfg)
+    return {"ln1": L.rmsnorm_defs(cfg.d_model), "attn": mix}
+
+
+def _ffn_defs(cfg: ArchConfig, kind: str) -> Dict[str, Any]:
+    if kind == "moe":
+        return {"ln2": L.rmsnorm_defs(cfg.d_model), "moe": L.moe_defs(cfg)}
+    if kind == "dense":
+        return {"ln2": L.rmsnorm_defs(cfg.d_model), "mlp": L.mlp_defs(cfg.d_model, cfg.d_ff)}
+    if kind == "none":
+        return {}
+    raise ValueError(kind)
+
+
+def block_defs(cfg: ArchConfig, mixer: str, ffn: str) -> Dict[str, Any]:
+    """mixer: attn | ssm;  ffn: dense | moe | none."""
+    if mixer == "ssm":
+        out = {"ln1": L.rmsnorm_defs(cfg.d_model), "ssm": S.ssm_defs(cfg)}
+    else:
+        out = _attn_defs(cfg)
+    out.update(_ffn_defs(cfg, ffn))
+    return out
+
+
+def _apply_mixer(bp, cfg: ArchConfig, x, cache, pos, mode: str, mixer: str):
+    h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+    if mixer == "ssm":
+        o, new_cache = S.ssm_block(bp["ssm"], cfg, h, cache, pos, mode)
+        return x + o, new_cache
+    ap = bp["attn"]
+    if cfg.mla is not None:
+        if mode == "decode":
+            o, new_cache = L.mla_attention_decode(ap, cfg, h, cache, pos)
+        elif mode == "prefill":
+            o, new_cache = L.mla_attention_prefill(ap, cfg, h, cache)
+        else:
+            o, new_cache = L.mla_attention_full(ap, cfg, h), None
+    else:
+        if mode == "decode":
+            o, new_cache = L.attention_decode(ap, cfg, h, cache, pos)
+        elif mode == "prefill":
+            o, new_cache = L.attention_prefill(ap, cfg, h, cache)
+        else:
+            o, new_cache = L.attention_full(ap, cfg, h), None
+    return x + o, new_cache
+
+
+def _apply_ffn(bp, cfg: ArchConfig, x, moe_impl: str):
+    if "moe" in bp:
+        h = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        return x + L.moe_layer(bp["moe"], cfg, h, impl=moe_impl)
+    if "mlp" in bp:
+        h = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        return x + L.mlp(bp["mlp"], h)
+    return x
+
+
+def block_apply(bp, cfg, x, cache, pos, mode, mixer, moe_impl="einsum"):
+    from repro.parallel.sharding import TRAIN_RULES, constrain
+
+    # re-pin batch sharding at block entry: GSPMD propagation can drop it
+    # through gather/concat chains (observed in the MLA path — §Perf i1)
+    x = constrain(x, ("batch", None, None), TRAIN_RULES)
+    x, new_cache = _apply_mixer(bp, cfg, x, cache, pos, mode, mixer)
+    x = _apply_ffn(bp, cfg, x, moe_impl)
+    x = constrain(x, ("batch", None, None), TRAIN_RULES)
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# cache defs per layer kind
+# --------------------------------------------------------------------------- #
+def _attn_cache_defs(cfg: ArchConfig, batch: int, max_seq: int) -> Dict[str, ParamDef]:
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "c_kv": ParamDef((batch, max_seq, m.kv_lora_rank),
+                             ("batch", "kvseq", None), init="zeros"),
+            "k_rope": ParamDef((batch, max_seq, m.rope_head_dim),
+                               ("batch", "kvseq", None), init="zeros"),
+        }
+    return {
+        "k": ParamDef((batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                      ("batch", "kvseq", "kv_heads", None), init="zeros"),
+        "v": ParamDef((batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                      ("batch", "kvseq", "kv_heads", None), init="zeros"),
+    }
+
+
+def cache_defs_for(cfg: ArchConfig, mixer: str, batch: int, max_seq: int):
+    if mixer == "ssm":
+        return S.ssm_cache_defs(cfg, batch)
+    return _attn_cache_defs(cfg, batch, max_seq)
+
+
+# --------------------------------------------------------------------------- #
+# segments: (name, n_repeat, mixer/ffn plan per position)
+# --------------------------------------------------------------------------- #
+def segments(cfg: ArchConfig) -> List[Dict[str, Any]]:
+    """Structural plan: list of segments, each a stacked scan of one block
+    pattern.  A segment's ``pattern`` is a list of (mixer, ffn) applied
+    positionally (unrolled) inside each scan step."""
+    if cfg.family == "ssm":
+        return [{"name": "ssm", "repeat": cfg.n_layers, "pattern": [("ssm", "none")]}]
+    if cfg.hybrid is not None:
+        period = cfg.hybrid.attn_period
+        assert cfg.n_layers % period == 0
+        pat = []
+        for j in range(period):
+            mixer = "attn" if j == cfg.hybrid.attn_offset else "ssm"
+            ffn = "moe" if cfg.is_moe_layer(j) else "dense"
+            pat.append((mixer, ffn))
+        return [{"name": "super", "repeat": cfg.n_layers // period, "pattern": pat}]
+    if cfg.moe is not None:
+        segs = []
+        fd = cfg.moe.first_dense
+        if fd:
+            segs.append({"name": "lead", "repeat": fd, "pattern": [("attn", "dense")]})
+        rest = cfg.n_layers - fd
+        if cfg.moe.every == 1:
+            segs.append({"name": "moe", "repeat": rest, "pattern": [("attn", "moe")]})
+        else:
+            per = cfg.moe.every
+            assert rest % per == 0
+            pat = [("attn", "moe" if cfg.is_moe_layer(fd + j) else "dense")
+                   for j in range(per)]
+            segs.append({"name": "moe", "repeat": rest // per, "pattern": pat})
+        return segs
+    return [{"name": "dense", "repeat": cfg.n_layers, "pattern": [("attn", "dense")]}]
+
+
+def _stack_defs(defs, n: int):
+    """Prepend a stacked [n] 'layers' dim to every ParamDef in the tree."""
+    def f(d: ParamDef) -> ParamDef:
+        import dataclasses
+        return dataclasses.replace(d, shape=(n, *d.shape), axes=("layers", *d.axes))
+    return jax.tree.map(f, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# --------------------------------------------------------------------------- #
+# whole-model defs
+# --------------------------------------------------------------------------- #
+def model_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    d, V = cfg.d_model, cfg.vocab
+    out: Dict[str, Any] = {
+        "embed": ParamDef((V, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": L.rmsnorm_defs(d),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ParamDef((d, V), ("embed", "vocab"))
+    segs = {}
+    for seg in segments(cfg):
+        pos_defs = [block_defs(cfg, mixer, ffn) for (mixer, ffn) in seg["pattern"]]
+        segs[seg["name"]] = _stack_defs(
+            {f"p{j}": pd for j, pd in enumerate(pos_defs)}, seg["repeat"]
+        )
+    out["segments"] = segs
+    return out
+
+
+def cache_model_defs(cfg: ArchConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    segs = {}
+    for seg in segments(cfg):
+        pos = {}
+        for j, (mixer, _ffn) in enumerate(seg["pattern"]):
+            pos[f"p{j}"] = cache_defs_for(cfg, mixer, batch, max_seq)
+        segs[seg["name"]] = _stack_defs(pos, seg["repeat"])
+    return {"segments": segs}
+
+
+def init_params(cfg: ArchConfig, key: jax.Array):
+    return init_tree(model_defs(cfg), key)
+
+
+def abstract_params(cfg: ArchConfig):
+    return abstract_tree(model_defs(cfg))
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    c = init_tree(cache_model_defs(cfg, batch, max_seq), jax.random.PRNGKey(0))
+    c["pos"] = jnp.zeros((), jnp.int32)
+    return c
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    c = abstract_tree(cache_model_defs(cfg, batch, max_seq))
+    c["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return c
+
+
+# --------------------------------------------------------------------------- #
+# forward / decode
+# --------------------------------------------------------------------------- #
+def _embed(params, cfg: ArchConfig, inputs: Dict[str, jax.Array]) -> jax.Array:
+    parts = []
+    if "embeds" in inputs and inputs["embeds"] is not None:
+        parts.append(inputs["embeds"].astype(params["embed"].dtype))
+    if "tokens" in inputs and inputs["tokens"] is not None:
+        parts.append(jnp.take(params["embed"], inputs["tokens"], axis=0))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return x
+
+
+def _unembed(params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def _run_segments(
+    params, cfg: ArchConfig, x, cache, pos, mode: str,
+    moe_impl: str = "einsum", remat: bool = False,
+):
+    new_cache = {"segments": {}} if mode in ("prefill", "decode") else None
+    for seg in segments(cfg):
+        sp = params["segments"][seg["name"]]
+        sc = cache["segments"][seg["name"]] if cache is not None else None
+
+        def step(carry, xs, _pat=seg["pattern"]):
+            h = carry
+            bp, cslice = xs
+            outs = {}
+            for j, (mixer, ffn) in enumerate(_pat):
+                cj = cslice[f"p{j}"] if cslice is not None else None
+                h, nc = block_apply(bp[f"p{j}"], cfg, h, cj, pos, mode, mixer, moe_impl)
+                outs[f"p{j}"] = nc if nc is not None else {}
+            return h, outs
+
+        if remat:
+            step = jax.checkpoint(
+                step, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            )
+        from repro.models import flags
+
+        x, seg_caches = jax.lax.scan(step, x, (sp, sc),
+                                     unroll=flags.unroll(seg["repeat"]))
+        if new_cache is not None:
+            new_cache["segments"][seg["name"]] = seg_caches
+    return x, new_cache
+
+
+def forward(
+    params,
+    cfg: ArchConfig,
+    inputs: Dict[str, jax.Array],
+    mode: str = "train",
+    cache=None,
+    moe_impl: str = "einsum",
+    remat: bool = False,
+):
+    """inputs: {tokens: [B,S] int32} and/or {embeds: [B,S,d]}.
+
+    mode="train": returns logits.  mode="prefill": returns (logits, cache);
+    ``cache`` must be a fresh ``init_cache``/abstract cache pytree.
+    """
+    x = _embed(params, cfg, inputs)
+    pos = jnp.zeros((), jnp.int32)
+    x, new_cache = _run_segments(params, cfg, x, cache, pos, mode,
+                                 moe_impl=moe_impl, remat=remat)
+    logits = _unembed(params, cfg, x)
+    if mode == "prefill":
+        new_cache["pos"] = jnp.asarray(x.shape[1], jnp.int32)
+        return logits, new_cache
+    return logits
+
+
+def decode_step(
+    params, cfg: ArchConfig, cache, tokens: jax.Array, moe_impl: str = "einsum"
+):
+    """One decode step: tokens [B,1] -> (logits [B,1,V], updated cache)."""
+    x = _embed(params, cfg, {"tokens": tokens})
+    pos = cache["pos"]
+    x, new_cache = _run_segments(params, cfg, x, cache, pos, "decode",
+                                 moe_impl=moe_impl)
+    logits = _unembed(params, cfg, x)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,25 @@
+from repro.parallel.sharding import (
+    AxisRules,
+    ParamDef,
+    TRAIN_RULES,
+    OPT_RULES,
+    SERVE_RULES,
+    logical_to_pspec,
+    tree_pspecs,
+    tree_shardings,
+    constrain,
+    mesh_axis_size,
+)
+
+__all__ = [
+    "AxisRules",
+    "ParamDef",
+    "TRAIN_RULES",
+    "OPT_RULES",
+    "SERVE_RULES",
+    "logical_to_pspec",
+    "tree_pspecs",
+    "tree_shardings",
+    "constrain",
+    "mesh_axis_size",
+]

@@ -1,0 +1,276 @@
+"""Logical-axis sharding: one place where mesh policy lives.
+
+Every parameter and activation dimension carries a *logical* axis name
+("embed", "heads", "experts", ...).  A policy (:class:`AxisRules`) maps each
+logical name to a preference list of mesh axes.  ``logical_to_pspec`` resolves
+a tensor's logical axes into a :class:`~jax.sharding.PartitionSpec`, enforcing
+
+* **divisibility** — a mesh axis is only used if it divides the dim size;
+* **exclusivity** — each mesh axis is consumed at most once per tensor
+  (first logical dim that claims it wins).
+
+Two built-in policies:
+
+* ``TRAIN_RULES`` — TP over ``model`` (heads/ffn/vocab/experts), FSDP/ZeRO
+  over ``data`` on the ``embed`` dim, batch over ``(pod, data)``.
+* ``SERVE_RULES`` — pure TP/EP (no per-step weight gathering); the KV-cache
+  sequence dim is sharded over ``model`` so huge caches spread across the
+  mesh (flash-decode combine happens via GSPMD partial softmax).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "AxisRules",
+    "ParamDef",
+    "TRAIN_RULES",
+    "SERVE_RULES",
+    "logical_to_pspec",
+    "tree_pspecs",
+    "tree_shardings",
+    "constrain",
+    "mesh_axis_size",
+]
+
+
+# --------------------------------------------------------------------------- #
+# policies
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Mapping logical axis name -> tuple of candidate mesh axes (in order)."""
+
+    name: str
+    rules: Mapping[str, Tuple[str, ...]]
+
+    def candidates(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        return tuple(self.rules.get(logical, ()))
+
+
+TRAIN_RULES = AxisRules(
+    name="train",
+    rules={
+        # activations
+        "batch": ("pod", "data"),
+        "seq": (),
+        "kvseq": ("model",),        # score/context sharding for long prefill
+        # parameters — TP family over `model`
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": (),
+        # head_dim TP fallback (§Perf i4): when the head count doesn't
+        # divide the model axis (qwen2.5's 40, arctic's 56, qwen2's 14),
+        # shard head_dim instead — attention weights then stop being
+        # FSDP-regathered every microbatch (was the dominant collective)
+        "qk": ("model",),
+        "ffn": ("model",),
+        "experts": ("model",),
+        "expert_embed": (),          # never FSDP-gathered (§Perf i5)
+        "expert_ffn": ("data",),     # TP over data: psum, not gather
+        # parameters — ZeRO/FSDP family over `data`
+        "embed": ("data",),
+        "ssm_inner": ("model",),
+        "state": (),
+        "layers": (),
+    },
+)
+
+# Optimizer state (and grad accumulators): fully sharded over BOTH axes —
+# ZeRO-style.  Same rules as train except `embed` may also consume `model`
+# when the TP family left it free, pushing m/v/grad to (data×model)-way.
+OPT_RULES = AxisRules(
+    name="opt",
+    rules=dict(TRAIN_RULES.rules, embed=("data", "model")),
+)
+
+SERVE_RULES = AxisRules(
+    name="serve",
+    rules={
+        "batch": ("pod", "data"),
+        "seq": (),
+        "kvseq": ("model",),        # seq-sharded KV cache (flash-decode)
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": (),
+        "qk": ("model",),           # head_dim TP when head count won't divide
+        # 2-D TP for FFN/expert weights at serve (§Perf i4): arctic's 960 GB
+        # of expert weights only 16-way sharded = 58 GiB/chip; adding `data`
+        # makes them 256-way (3.75 GiB) with activation psums instead of
+        # weight gathers — the right trade for decode's tiny activations
+        "ffn": ("model", "data"),
+        "experts": ("model",),
+        "expert_embed": (),
+        "expert_ffn": ("data",),
+        "embed": (),                # no FSDP at serve time: weights stay put
+        "ssm_inner": ("model",),
+        "state": (),
+        "layers": (),
+    },
+)
+
+
+def mesh_axis_size(mesh_shape: Mapping[str, int], axes: Sequence[str]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh_shape.get(a, 1)
+    return n
+
+
+def logical_to_pspec(
+    logical_axes: Sequence[Optional[str]],
+    dim_sizes: Sequence[int],
+    rules: AxisRules,
+    mesh_shape: Mapping[str, int],
+) -> P:
+    """Resolve logical axes into a PartitionSpec for a concrete mesh.
+
+    Two-phase greedy: phase 1 gives every dim (left to right) at most ONE
+    mesh axis — its first unclaimed, divisibility-compatible candidate — so
+    an early dim with a long candidate list (e.g. ZeRO's ``embed``) cannot
+    starve a later dim's primary TP axis.  Phase 2 revisits dims and extends
+    each with its remaining candidates if still unclaimed and divisible.
+    """
+    if len(logical_axes) != len(dim_sizes):
+        raise ValueError(
+            f"logical axes {logical_axes} rank != shape {tuple(dim_sizes)} rank"
+        )
+    used: set = set()
+    picked: list = [[] for _ in logical_axes]
+    prods: list = [1 for _ in logical_axes]
+
+    def try_claim(i: int, name: Optional[str], size: int, limit: int) -> None:
+        for cand in rules.candidates(name):
+            if len(picked[i]) >= limit:
+                return
+            if cand in used or cand not in mesh_shape:
+                continue
+            nxt = prods[i] * mesh_shape[cand]
+            if size % nxt != 0:
+                continue
+            picked[i].append(cand)
+            prods[i] = nxt
+            used.add(cand)
+
+    for i, (name, size) in enumerate(zip(logical_axes, dim_sizes)):
+        try_claim(i, name, size, limit=1)
+    for i, (name, size) in enumerate(zip(logical_axes, dim_sizes)):
+        try_claim(i, name, size, limit=8)
+
+    out: list = []
+    for p in picked:
+        if not p:
+            out.append(None)
+        elif len(p) == 1:
+            out.append(p[0])
+        else:
+            out.append(tuple(p))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+# --------------------------------------------------------------------------- #
+# parameter definitions
+# --------------------------------------------------------------------------- #
+InitFn = Callable[[jax.Array, Tuple[int, ...], Any], jax.Array]
+
+
+def _init_normal(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Shape + logical axes + initializer of one parameter tensor.
+
+    The single source of truth both ``init`` (materialize arrays) and
+    ``specs`` (derive shardings) read from, so they can never drift.
+    """
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"  # normal | zeros | ones
+    scale: Optional[float] = None  # default: 1/sqrt(fan_in = shape[-2] or [-1])
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+    def default_scale(self) -> float:
+        if self.scale is not None:
+            return self.scale
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        return 1.0 / math.sqrt(max(fan_in, 1))
+
+    def materialize(self, key: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "normal":
+            return _init_normal(key, self.shape, self.dtype, self.default_scale())
+        raise ValueError(f"unknown init {self.init!r}")
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def pspec(self, rules: AxisRules, mesh_shape: Mapping[str, int]) -> P:
+        return logical_to_pspec(self.axes, self.shape, rules, mesh_shape)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_tree(defs, key: jax.Array):
+    """Materialize a pytree of ParamDef into arrays (deterministic keying)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [d.materialize(k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_tree(defs):
+    """ShapeDtypeStruct pytree (for ``.lower`` without allocation)."""
+    return jax.tree.map(lambda d: d.abstract(), defs, is_leaf=_is_def)
+
+
+def tree_pspecs(defs, rules: AxisRules, mesh_shape: Mapping[str, int]):
+    return jax.tree.map(lambda d: d.pspec(rules, mesh_shape), defs, is_leaf=_is_def)
+
+
+def tree_shardings(defs, rules: AxisRules, mesh: Mesh):
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree.map(
+        lambda d: NamedSharding(mesh, d.pspec(rules, shape)), defs, is_leaf=_is_def
+    )
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]], rules: AxisRules):
+    """``with_sharding_constraint`` by logical names; no-op outside a mesh."""
+    mesh = _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = logical_to_pspec(logical_axes, x.shape, rules, shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        from jax.interpreters import pxla
+
+        mesh = pxla.thread_resources.env.physical_mesh
+        return mesh
+    except Exception:
+        return None

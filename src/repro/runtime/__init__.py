@@ -1,0 +1,8 @@
+from repro.runtime.elastic import (
+    HealthMonitor,
+    WorkerState,
+    ElasticPlanner,
+    simulate_failure_recovery,
+)
+
+__all__ = ["HealthMonitor", "WorkerState", "ElasticPlanner", "simulate_failure_recovery"]

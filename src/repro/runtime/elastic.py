@@ -1,0 +1,179 @@
+"""Fault tolerance & elasticity runtime (DESIGN §5).
+
+On a real multi-pod deployment every worker process runs this monitor next
+to the training loop; here the same logic is driven by a deterministic
+simulated clock so the policies are testable on one CPU.
+
+Components
+----------
+* :class:`HealthMonitor` — heartbeats + per-step timing.  A worker is
+  **dead** after ``heartbeat_timeout`` without a beat and a **straggler**
+  when its step time exceeds ``straggler_factor`` × the rolling median of
+  the fleet (the classic z-ish test used by large-scale trainers).
+* :class:`ElasticPlanner` — turns a health verdict into a new plan:
+  the surviving worker set is re-meshed, and — this is the paper's loop
+  closed — the *same offline DAG scheduler* that produced the original
+  m-worker schedule re-solves the problem with ``m' < m`` workers
+  (ISH/DSH, §3.3).  Elastic degradation is just "schedule again with fewer
+  cores", exactly the ACETONE offline problem.
+* :func:`simulate_failure_recovery` — end-to-end drill used by tests and
+  ``examples/elastic_demo.py``: train, kill a worker, detect, re-plan,
+  restore from the latest checkpoint, continue; the loss curve must join.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.graph import DAG
+from repro.core.list_scheduling import dsh, ish
+from repro.core.schedule import Schedule
+
+__all__ = ["WorkerState", "HealthMonitor", "ElasticPlanner", "simulate_failure_recovery"]
+
+
+@dataclasses.dataclass
+class WorkerState:
+    worker_id: int
+    last_heartbeat: float = 0.0
+    step_times: List[float] = dataclasses.field(default_factory=list)
+    alive: bool = True
+    straggler: bool = False
+
+
+class HealthMonitor:
+    """Heartbeat + straggler tracking over a simulated or real clock."""
+
+    def __init__(
+        self,
+        n_workers: int,
+        heartbeat_timeout: float = 30.0,
+        straggler_factor: float = 2.0,
+        window: int = 16,
+    ):
+        self.workers = {i: WorkerState(i) for i in range(n_workers)}
+        self.heartbeat_timeout = heartbeat_timeout
+        self.straggler_factor = straggler_factor
+        self.window = window
+        self.now = 0.0
+
+    # ---- feed ---------------------------------------------------------- #
+    def advance(self, dt: float) -> None:
+        self.now += dt
+
+    def heartbeat(self, worker: int, t: Optional[float] = None) -> None:
+        self.workers[worker].last_heartbeat = self.now if t is None else t
+
+    def record_step(self, step: int, dt: float, worker: int = 0) -> None:
+        w = self.workers[worker]
+        w.step_times.append(dt)
+        if len(w.step_times) > self.window:
+            w.step_times.pop(0)
+        self.heartbeat(worker)
+
+    # ---- verdicts ------------------------------------------------------ #
+    def check(self) -> Dict[str, List[int]]:
+        dead, stragglers = [], []
+        medians = [
+            statistics.median(w.step_times)
+            for w in self.workers.values()
+            if w.alive and w.step_times
+        ]
+        fleet_median = statistics.median(medians) if medians else None
+        for w in self.workers.values():
+            if not w.alive:
+                continue
+            if self.now - w.last_heartbeat > self.heartbeat_timeout:
+                w.alive = False
+                dead.append(w.worker_id)
+                continue
+            if (
+                fleet_median
+                and w.step_times
+                and statistics.median(w.step_times)
+                > self.straggler_factor * fleet_median
+            ):
+                w.straggler = True
+                stragglers.append(w.worker_id)
+            else:
+                w.straggler = False
+        return {"dead": dead, "stragglers": stragglers}
+
+    def alive_workers(self) -> List[int]:
+        return [w.worker_id for w in self.workers.values() if w.alive]
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    workers: Tuple[int, ...]
+    schedule: Optional[Schedule]
+    makespan: Optional[float]
+    action: str          # "continue" | "remesh" | "exclude_straggler"
+
+
+class ElasticPlanner:
+    """Re-plans the work distribution when the fleet changes.
+
+    The planner holds the application's task DAG (layer graph, expert
+    placement graph, or pipeline-stage graph) and re-runs the ACETONE
+    scheduler for the surviving worker count — the paper's offline solver
+    reused online as the degraded-mode planner.
+    """
+
+    def __init__(self, dag: DAG, heuristic: str = "dsh"):
+        self.dag = dag
+        self.heuristic = {"ish": ish, "dsh": dsh}[heuristic]
+
+    def replan(self, monitor: HealthMonitor, exclude_stragglers: bool = False) -> ElasticPlan:
+        verdict = monitor.check()
+        workers = monitor.alive_workers()
+        action = "continue"
+        if verdict["dead"]:
+            action = "remesh"
+        if exclude_stragglers and verdict["stragglers"]:
+            workers = [w for w in workers if w not in verdict["stragglers"]]
+            action = "exclude_straggler"
+        if not workers:
+            raise RuntimeError("no healthy workers remain")
+        if action == "continue":
+            return ElasticPlan(tuple(workers), None, None, action)
+        sched = self.heuristic(self.dag, len(workers))
+        return ElasticPlan(
+            tuple(workers), sched, sched.makespan(self.dag), action
+        )
+
+
+def simulate_failure_recovery(
+    trainer_factory: Callable[[], "object"],
+    fail_at_step: int,
+    total_steps: int,
+    ckpt_every: int,
+) -> Dict[str, object]:
+    """Kill-and-resume drill.
+
+    1. Train to ``fail_at_step`` with periodic checkpoints, then "crash"
+       (drop the trainer object — simulating a pod loss).
+    2. Build a fresh trainer (new process semantics), restore the latest
+       checkpoint, finish the run.
+    Returns both loss histories and the step the resume started from; the
+    caller asserts the resumed curve continues (no reset to init loss).
+    """
+    t1 = trainer_factory()
+    t1.ckpt_every = ckpt_every
+    t1.run(fail_at_step, log_every=0)
+    t1.ckpt.wait()
+    hist1 = list(t1.history)
+    del t1  # crash
+
+    t2 = trainer_factory()
+    t2.ckpt_every = ckpt_every
+    resumed = t2.maybe_restore()
+    resume_step = t2.step
+    t2.run(total_steps - t2.step, log_every=0)
+    return {
+        "resumed": resumed,
+        "resume_step": resume_step,
+        "pre_crash": hist1,
+        "post_crash": list(t2.history),
+    }

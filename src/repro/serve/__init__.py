@@ -1,0 +1,3 @@
+from repro.serve.engine import ServeConfig, Engine, make_prefill_step, make_decode_step
+
+__all__ = ["ServeConfig", "Engine", "make_prefill_step", "make_decode_step"]

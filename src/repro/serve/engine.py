@@ -1,0 +1,148 @@
+"""Batched inference engine: prefill + KV-cache decode with slot scheduling.
+
+``make_prefill_step`` / ``make_decode_step`` are the pure jit-able functions
+the dry-run lowers for the ``prefill_32k`` / ``decode_32k`` / ``long_500k``
+cells.  :class:`Engine` adds continuous batching on top: a fixed pool of
+cache *slots*; finished requests release their slot, queued requests claim
+it (prefill writes into the slot), and every engine tick decodes one token
+for all live slots — the standard iteration-level scheduling of modern
+serving systems, here with a static shape (slot count) so each tick is one
+fixed compiled program (predictability — the ACETONE constraint).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+__all__ = ["ServeConfig", "Engine", "make_prefill_step", "make_decode_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seq: int = 32768
+    slots: int = 8              # concurrent sequences (decode batch)
+    moe_impl: str = "einsum"
+    greedy: bool = True
+
+
+def make_prefill_step(cfg: ArchConfig, scfg: ServeConfig) -> Callable:
+    """(params, cache, inputs) -> (last_logits [B,V], cache)."""
+
+    def step(params, cache, inputs):
+        logits, cache = T.forward(params, cfg, inputs, mode="prefill",
+                                  cache=cache, moe_impl=scfg.moe_impl)
+        return logits[:, -1], cache
+
+    return step
+
+
+def make_decode_step(cfg: ArchConfig, scfg: ServeConfig) -> Callable:
+    """(params, cache, tokens [B,1]) -> (logits [B,V], cache)."""
+
+    def step(params, cache, tokens):
+        logits, cache = T.decode_step(params, cfg, cache, tokens,
+                                      moe_impl=scfg.moe_impl)
+        return logits[:, 0], cache
+
+    return step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Continuous-batching engine over a fixed slot pool (single host)."""
+
+    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig = ServeConfig()):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        self._prefill1 = jax.jit(make_prefill_step(cfg, dataclasses.replace(scfg)))
+        self._decode = jax.jit(make_decode_step(cfg, scfg), donate_argnums=(1,))
+        # slot-pool state: one shared batched cache, per-slot bookkeeping
+        self.cache = T.init_cache(cfg, scfg.slots, scfg.max_seq)
+        self.slot_req: List[Optional[Request]] = [None] * scfg.slots
+        self.slot_pos = [0] * scfg.slots
+        self.next_tok = jnp.zeros((scfg.slots, 1), jnp.int32)
+        self.queue: List[Request] = []
+        self._rid = 0
+
+    # ------------------------------------------------------------------ #
+    def submit(self, prompt: List[int], max_new: int = 16) -> Request:
+        r = Request(rid=self._rid, prompt=list(prompt), max_new=max_new)
+        self._rid += 1
+        self.queue.append(r)
+        return r
+
+    def _admit(self):
+        """Claim free slots for queued requests; prefill their prompt."""
+        for s in range(self.scfg.slots):
+            if self.slot_req[s] is not None or not self.queue:
+                continue
+            r = self.queue.pop(0)
+            # per-slot prefill with a single-sequence cache, then splice in
+            tmp_cache = T.init_cache(self.cfg, 1, self.scfg.max_seq)
+            toks = jnp.asarray(r.prompt, jnp.int32)[None, :]
+            last, tmp_cache = self._prefill1(self.params, tmp_cache, {"tokens": toks})
+            tok0 = int(jnp.argmax(last[0]))
+            self.cache = _splice_cache(self.cache, tmp_cache, s)
+            self.next_tok = self.next_tok.at[s, 0].set(tok0)
+            r.out.append(tok0)
+            self.slot_req[s] = r
+            self.slot_pos[s] = len(r.prompt)
+
+    def tick(self) -> int:
+        """One engine iteration: admit + decode one token for all live slots."""
+        self._admit()
+        live = [s for s in range(self.scfg.slots) if self.slot_req[s] is not None]
+        if not live:
+            return 0
+        # a single fixed-shape decode step serves every slot (idle slots too);
+        # per-slot positions make ragged continuous batching exact
+        self.cache["pos"] = jnp.asarray(self.slot_pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, self.next_tok)
+        toks = jnp.argmax(logits, axis=-1)
+        for s in live:
+            r = self.slot_req[s]
+            t = int(toks[s])
+            r.out.append(t)
+            self.slot_pos[s] += 1
+            if len(r.out) >= r.max_new:
+                r.done = True
+                self.slot_req[s] = None
+        self.next_tok = toks[:, None].astype(jnp.int32)
+        return len(live)
+
+    def run_until_done(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and all(r is None for r in self.slot_req):
+                return
+            self.tick()
+        raise RuntimeError("engine did not drain")
+
+
+def _splice_cache(cache, single, slot: int):
+    """Write a batch-1 cache into slot ``slot`` of the pooled cache.
+
+    Cache leaves are layer-stacked: ``[L, B, ...]`` — the slot is dim 1.
+    """
+    out = {}
+    for seg in cache["segments"]:
+        out[seg] = jax.tree.map(
+            lambda d, s: jax.lax.dynamic_update_slice(
+                d, s.astype(d.dtype),
+                (0, slot) + (0,) * (d.ndim - 2)),
+            cache["segments"][seg], single["segments"][seg])
+    return {"segments": out, "pos": cache["pos"]}

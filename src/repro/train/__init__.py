@@ -1,0 +1,9 @@
+from repro.train.loop import (
+    TrainConfig,
+    make_train_step,
+    make_eval_step,
+    loss_fn,
+    Trainer,
+)
+
+__all__ = ["TrainConfig", "make_train_step", "make_eval_step", "loss_fn", "Trainer"]

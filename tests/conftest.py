@@ -1,0 +1,30 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on 1 CPU device;
+multi-device tests spawn subprocesses with their own flags."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_subprocess(code: str, devices: int = 0, timeout: int = 600) -> str:
+    """Run python code in a subprocess, optionally with fake devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if devices:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=timeout,
+    )
+    if out.returncode != 0:
+        raise AssertionError(f"subprocess failed:\n{out.stdout}\n{out.stderr}")
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_subprocess

@@ -1,0 +1,131 @@
+"""Dry-run machinery on a mini mesh (subprocess, 8 placeholder devices).
+
+Validates the full lower->compile->cost/memory/collective analysis path for
+every step kind and model family on a (2, 2, 2) mesh with reduced configs —
+the cheap proxy for the 512-device production run (whose artifacts live in
+artifacts/dryrun and are checked by test_dryrun_artifacts)."""
+import json
+import os
+
+import pytest
+
+MINI = """
+import os, dataclasses, json
+import jax
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.launch.analysis import analyze_cell
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+out = {}
+cells = [
+    ("qwen2-0.5b", ShapeSpec("t", "train", 64, 8)),
+    ("qwen2-0.5b", ShapeSpec("p", "prefill", 128, 4)),
+    ("qwen2-0.5b", ShapeSpec("d", "decode", 128, 8)),
+    ("deepseek-v2-lite-16b", ShapeSpec("t", "train", 64, 8)),
+    ("arctic-480b", ShapeSpec("d", "decode", 128, 8)),
+    ("mamba2-370m", ShapeSpec("t", "train", 64, 8)),
+    ("mamba2-370m", ShapeSpec("d", "decode", 128, 8)),
+    ("jamba-v0.1-52b", ShapeSpec("t", "train", 64, 8)),
+    ("hubert-xlarge", ShapeSpec("t", "train", 64, 8)),
+    ("llava-next-mistral-7b", ShapeSpec("t", "train", 640, 8)),
+]
+for arch, shape in cells:
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, max_seq=shape.seq_len)
+    rec = analyze_cell(cfg, shape, mesh)
+    key = f"{arch}:{shape.kind}"
+    out[key] = {
+        "flops": rec["hlo_flops_per_dev"],
+        "bytes": rec["hlo_bytes_per_dev"],
+        "coll": rec["collective_total_per_dev"],
+        "dominant": rec["dominant"],
+    }
+print("JSON:" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def mini_results(subproc):
+    out = subproc(MINI, devices=8, timeout=900)
+    payload = [l for l in out.splitlines() if l.startswith("JSON:")][0][5:]
+    return json.loads(payload)
+
+
+def test_all_kinds_compile(mini_results):
+    kinds = {k.split(":")[1] for k in mini_results}
+    assert kinds == {"train", "prefill", "decode"}
+    assert len(mini_results) == 10
+
+
+def test_flops_and_bytes_positive(mini_results):
+    for k, v in mini_results.items():
+        assert v["flops"] > 0, k
+        assert v["bytes"] > 0, k
+
+
+def test_sharded_step_produces_collectives(mini_results):
+    """A TP/FSDP-sharded train step must communicate."""
+    assert mini_results["qwen2-0.5b:train"]["coll"] > 0
+    assert mini_results["deepseek-v2-lite-16b:train"]["coll"] > 0
+
+
+def test_train_flops_exceed_decode(mini_results):
+    assert (mini_results["qwen2-0.5b:train"]["flops"]
+            > mini_results["qwen2-0.5b:decode"]["flops"])
+
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts", "dryrun")
+
+
+@pytest.mark.skipif(not os.path.isdir(ART) or not os.listdir(ART),
+                    reason="production dry-run artifacts not generated yet")
+class TestProductionArtifacts:
+    """Checks over the real 512-device dry-run outputs (when present)."""
+
+    def _load(self):
+        recs = []
+        for f in os.listdir(ART):
+            if f.endswith(".json"):
+                with open(os.path.join(ART, f)) as fh:
+                    recs.append(json.load(fh))
+        return recs
+
+    def test_no_errors_in_artifacts(self):
+        errs = [r for r in self._load() if "error" in r]
+        assert not errs, [(e["arch"], e["shape"], e["mesh"], e["error"])
+                          for e in errs]
+
+    def test_runnable_cells_have_roofline(self):
+        done = [r for r in self._load() if "roofline" in r]
+        for r in done:
+            assert r["roofline"]["compute_s"] >= 0
+            assert r["dominant"] in ("compute_s", "memory_s", "collective_s")
+
+    # cells still above the 16 GiB budget after the §Perf pass — tracked in
+    # EXPERIMENTS.md (down from 26 in the baseline); the test pins the set
+    # so regressions surface.
+    KNOWN_OVER = {
+        ("arctic-480b", "train_4k"), ("arctic-480b", "prefill_32k"),
+        ("arctic-480b", "decode_32k"),
+        ("qwen2.5-32b", "train_4k"), ("qwen3-32b", "train_4k"),
+        ("qwen2.5-32b", "decode_32k"), ("qwen3-32b", "decode_32k"),
+        ("mamba2-370m", "train_4k"), ("jamba-v0.1-52b", "train_4k"),
+    }
+
+    def test_hbm_within_capacity(self):
+        over = {
+            (r["arch"], r["shape"])
+            for r in self._load()
+            if "hbm_per_dev_bytes" in r and not r["hbm_ok"]
+        }
+        new_over = over - self.KNOWN_OVER
+        assert not new_over, f"NEW cells exceeding 16 GiB HBM: {sorted(new_over)}"
+
+    def test_hbm_headroom_bounded(self):
+        """Even flagged cells stay within ~3x of budget (baseline had 12x)."""
+        worst = max(
+            (r["hbm_per_dev_bytes"] / 2**30 for r in self._load()
+             if "hbm_per_dev_bytes" in r), default=0)
+        assert worst < 48, worst

@@ -1,0 +1,116 @@
+"""DAG model tests (paper §2.2) — structure, costs, generators."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DAG, GraphError, density, random_dag
+
+
+def small_dag():
+    return DAG.build(
+        nodes=["a", "b", "c", "d"],
+        edges=[("a", "b"), ("a", "c"), ("b", "d"), ("c", "d")],
+        t={"a": 1, "b": 2, "c": 3, "d": 1},
+        w={("a", "b"): 1, ("a", "c"): 1, ("b", "d"): 2, ("c", "d"): 2},
+    )
+
+
+class TestConstruction:
+    def test_cycle_rejected(self):
+        with pytest.raises(GraphError):
+            DAG.build(["a", "b"], [("a", "b"), ("b", "a")], {"a": 1, "b": 1},
+                      default_w=0)
+
+    def test_self_loop_rejected(self):
+        with pytest.raises(GraphError):
+            DAG.build(["a"], [("a", "a")], {"a": 1}, default_w=0)
+
+    def test_unknown_node_rejected(self):
+        with pytest.raises(GraphError):
+            DAG.build(["a"], [("a", "b")], {"a": 1}, default_w=0)
+
+    def test_missing_cost_rejected(self):
+        with pytest.raises(GraphError):
+            DAG(nodes=("a",), edges=(), t={}, w={})
+
+    def test_negative_cost_rejected(self):
+        with pytest.raises(GraphError):
+            DAG.build(["a"], [], {"a": -1})
+
+
+class TestStructure:
+    def test_parents_children(self):
+        d = small_dag()
+        assert d.parents("d") == ("b", "c")
+        assert d.children("a") == ("b", "c")
+        assert d.sources() == ("a",)
+        assert d.sinks() == ("d",)
+
+    def test_topological_order(self):
+        d = small_dag()
+        order = d.topological_order()
+        pos = {n: i for i, n in enumerate(order)}
+        for (u, v) in d.edges:
+            assert pos[u] < pos[v]
+
+    def test_levels(self):
+        d = small_dag()
+        lv = d.levels()
+        # level = t(v) + max child level (no comm)
+        assert lv["d"] == 1
+        assert lv["b"] == 3
+        assert lv["c"] == 4
+        assert lv["a"] == 5
+
+    def test_levels_with_comm(self):
+        d = small_dag()
+        lv = d.levels_with_comm()
+        assert lv["c"] == 3 + 2 + 1
+        assert lv["a"] == 1 + 1 + lv["c"]
+
+    def test_sequential_makespan(self):
+        assert small_dag().sequential_makespan() == 7
+
+    def test_max_parallelism(self):
+        assert small_dag().max_parallelism() == 2
+
+    def test_subgraph(self):
+        d = small_dag().subgraph(["a", "b", "d"])
+        assert set(d.nodes) == {"a", "b", "d"}
+        assert ("a", "b") in d.edges and ("c", "d") not in d.edges
+
+
+class TestOneSink:
+    def test_already_single_sink(self):
+        d = small_dag()
+        assert d.one_sink() is d
+
+    def test_multi_sink_transform(self):
+        d = DAG.build(["a", "b", "c"], [("a", "b"), ("a", "c")],
+                      {"a": 1, "b": 1, "c": 1}, default_w=1)
+        ds = d.one_sink()
+        assert len(ds.sinks()) == 1
+        s = ds.sinks()[0]
+        assert ds.t[s] == 0.0
+        assert all(ds.w[(x, s)] == 0.0 for x in ("b", "c"))
+
+
+class TestRandomDag:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(5, 60), st.integers(0, 10_000))
+    def test_generator_properties(self, n, seed):
+        d = random_dag(n, 0.10, seed=seed)
+        assert len(d.sinks()) == 1                      # single sink (step 3)
+        for v in d.nodes[: n]:
+            pass
+        # costs in [1, 10] for original nodes (sink may be 0)
+        orig = [x for x in d.nodes if not x.startswith("__")]
+        assert all(1 <= d.t[x] <= 10 for x in orig)
+        d.topological_order()                            # acyclic
+
+    def test_density_targets(self):
+        for n in (20, 50, 100):
+            d = random_dag(n, 0.10, seed=1, one_sink=False)
+            assert abs(density(d) - 0.10) < 0.05
+
+    def test_deterministic(self):
+        assert random_dag(30, 0.1, seed=7).edges == random_dag(30, 0.1, seed=7).edges

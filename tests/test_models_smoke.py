@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family configs,
+one forward/train step on CPU, output shapes + no NaNs; decode == teacher
+forcing where exact."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs, runnable_cells, skip_reason
+from repro.models import decode_step, forward, init_cache, init_params
+from repro.models.frontends import synth_inputs
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, B=2, S=16):
+    return synth_inputs(cfg, B, S, seed=1)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+class TestSmoke:
+    def test_forward_shapes_no_nan(self, arch):
+        cfg = get_config(arch).reduced()
+        params = init_params(cfg, KEY)
+        B, S = 2, 16
+        logits = forward(params, cfg, _inputs(cfg, B, S), mode="train")
+        assert logits.shape == (B, S, cfg.vocab)
+        assert not jnp.isnan(logits.astype(jnp.float32)).any()
+
+    def test_one_train_step(self, arch):
+        cfg = get_config(arch).reduced()
+        params = init_params(cfg, KEY)
+        from repro.optim.adamw import adamw_init
+        tcfg = TrainConfig(microbatches=1, remat=False,
+                           optim=AdamWConfig(lr=1e-3, warmup_steps=1))
+        step = make_train_step(cfg, tcfg)
+        B, S = 2, 16
+        batch = dict(_inputs(cfg, B, S))
+        n_lab = batch["tokens"].shape[1] if "tokens" in batch else S
+        batch["labels"] = jax.random.randint(KEY, (B, n_lab), 0, cfg.vocab)
+        p2, o2, metrics = step(params, adamw_init(params, tcfg.optim), batch)
+        assert jnp.isfinite(metrics["loss"])
+        assert jnp.isfinite(metrics["grad_norm"])
+        # params actually moved
+        diff = sum(float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).sum())
+                   for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+        assert diff > 0
+
+
+@pytest.mark.parametrize("arch", [a for a in list_archs()
+                                  if not get_config(a).encoder_only])
+def test_decode_matches_teacher_forcing(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.moe:  # disable capacity drops so the comparison is exact
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    params = init_params(cfg, KEY)
+    B, S, P0 = 2, 12, 8
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    full = forward(params, cfg, {"tokens": toks}, mode="train").astype(jnp.float32)
+    cache = init_cache(cfg, B, 32)
+    _, cache = forward(params, cfg, {"tokens": toks[:, :P0]}, mode="prefill",
+                       cache=cache)
+    errs = []
+    for t in range(P0, S):
+        lg, cache = decode_step(params, cfg, cache, toks[:, t:t + 1])
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, t]).max()))
+    tol = 0.5 if cfg.mla is not None else 1e-3   # MLA absorbed path is bf16
+    assert max(errs) < tol, errs
+
+
+def test_prefill_equals_train_logits():
+    cfg = get_config("qwen3-32b").reduced()
+    params = init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    a = forward(params, cfg, {"tokens": toks}, mode="train")
+    cache = init_cache(cfg, 2, 32)
+    b, _ = forward(params, cfg, {"tokens": toks}, mode="prefill", cache=cache)
+    assert float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()) < 1e-5
+
+
+def test_moe_scatter_matches_einsum():
+    for arch in ("deepseek-v2-lite-16b", "arctic-480b", "jamba-v0.1-52b"):
+        cfg = get_config(arch).reduced()
+        params = init_params(cfg, KEY)
+        toks = jax.random.randint(KEY, (2, 32), 0, cfg.vocab)
+        a = forward(params, cfg, {"tokens": toks}, mode="train", moe_impl="einsum")
+        b = forward(params, cfg, {"tokens": toks}, mode="train", moe_impl="scatter")
+        assert float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()) < 5e-2
+
+
+def test_cell_skip_rules():
+    """The 40-cell grid: 31 runnable, 9 skipped per the brief."""
+    runnable = skipped = 0
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for s in SHAPES:
+            if skip_reason(cfg, s) is None:
+                runnable += 1
+            else:
+                skipped += 1
+    assert runnable == 31 and skipped == 9
+    # hubert: no decode shapes; dense LMs: no long_500k; ssm/hybrid run all
+    hubert = get_config("hubert-xlarge")
+    assert runnable_cells(hubert) == ("train_4k", "prefill_32k")
+    assert "long_500k" in runnable_cells(get_config("mamba2-370m"))
+    assert "long_500k" in runnable_cells(get_config("jamba-v0.1-52b"))
+    assert "long_500k" not in runnable_cells(get_config("qwen2.5-32b"))
+
+
+def test_param_counts_plausible():
+    """Analytic param counts should be near the advertised sizes."""
+    expect = {
+        "qwen2-0.5b": (0.35e9, 0.7e9),
+        "qwen2.5-32b": (28e9, 36e9),
+        "tinyllama-1.1b": (0.9e9, 1.3e9),
+        "qwen3-32b": (28e9, 36e9),
+        "deepseek-v2-lite-16b": (13e9, 18e9),
+        "arctic-480b": (430e9, 520e9),
+        "mamba2-370m": (0.3e9, 0.5e9),
+        "jamba-v0.1-52b": (46e9, 58e9),
+        "llava-next-mistral-7b": (6.5e9, 8e9),
+        # ~1B advertised; our uniform SwiGLU FFN adds a third matrix vs
+        # HuBERT's GELU MLP (+33% FFN params) — noted in DESIGN §4
+        "hubert-xlarge": (0.8e9, 1.4e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        total, active = get_config(arch).param_count()
+        assert lo <= total <= hi, (arch, total)
+        assert active <= total

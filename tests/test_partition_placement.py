@@ -1,0 +1,93 @@
+"""Pipeline partitioning + expert placement — the paper's scheduler applied
+to the two LM-scale problems (DESIGN §4)."""
+import pytest
+
+from repro.core.expert_placement import balanced_placement, expert_dag, place_experts
+from repro.core.graph import DAG
+from repro.core.pipeline_partition import chain_partition, dag_partition
+
+
+class TestChainPartition:
+    def test_balanced_uniform_chain(self):
+        plan = chain_partition([1.0] * 8, 4)
+        assert plan.n_stages == 4
+        assert plan.stage_cost == (2.0, 2.0, 2.0, 2.0)
+        assert plan.bottleneck == 2.0
+
+    def test_skewed_chain(self):
+        # one huge layer forces its own stage
+        plan = chain_partition([1, 1, 10, 1, 1], 3)
+        assert plan.bottleneck == 10
+        assert ("L2",) in plan.stages
+
+    def test_contiguity_and_coverage(self):
+        costs = [3, 1, 4, 1, 5, 9, 2, 6]
+        plan = chain_partition(costs, 3)
+        flat = [n for st in plan.stages for n in st]
+        assert flat == [f"L{i}" for i in range(8)]
+
+    def test_edge_comm_charged(self):
+        # cutting across a huge activation must be avoided: the partitioner
+        # accepts an unbalanced (4 | 12) split rather than paying the
+        # 100-unit boundary of the balanced (8 | 8+100) one
+        p = chain_partition([4, 4, 4, 4], 2, edge_comm=[0, 100, 0])
+        assert 100 not in p.boundary_comm
+        assert p.bottleneck == 12
+        free = chain_partition([4, 4, 4, 4], 2, edge_comm=[0, 0, 0])
+        assert free.bottleneck == 8
+
+    def test_more_stages_than_layers(self):
+        plan = chain_partition([1, 2], 5)
+        assert plan.n_stages == 2
+
+    def test_bubble_fraction(self):
+        plan = chain_partition([1] * 4, 4)
+        assert plan.bubble_fraction(12) == pytest.approx(3 / 15)
+        assert plan.bubble_fraction(1) == pytest.approx(3 / 4)
+
+
+class TestDagPartition:
+    def test_branchy_graph(self):
+        d = DAG.build(
+            ["in", "a", "b", "out"],
+            [("in", "a"), ("in", "b"), ("a", "out"), ("b", "out")],
+            {"in": 1, "a": 5, "b": 5, "out": 1},
+            default_w=0.1,
+        )
+        plan = dag_partition(d, 2)
+        assert plan.n_stages <= 2
+        assert sum(plan.stage_cost) >= 12  # all work covered (dups may add)
+
+
+class TestExpertPlacement:
+    def test_dag_shape(self):
+        d = expert_dag([1.0, 2.0, 3.0])
+        assert len(d.nodes) == 5
+        assert len(d.sinks()) == 1
+
+    def test_balanced_baseline(self):
+        plan = balanced_placement([5, 4, 3, 3, 2, 1], 3)
+        assert plan.n_groups == 3
+        assert sum(plan.group_load) == pytest.approx(18)
+        assert plan.bottleneck <= 7  # LPT bound
+
+    def test_scheduler_placement_covers_all(self):
+        loads = [3.0, 1.0, 2.0, 5.0, 1.0, 4.0, 2.0, 2.0]
+        plan = place_experts(loads, 4)
+        assert set(plan.assignment) == set(range(8))
+        assert all(len(g) >= 1 for g in plan.assignment.values())
+
+    def test_skewed_load_beats_naive_spread(self):
+        """A pathologically hot expert: scheduler bottleneck must not exceed
+        the single-group-gets-everything baseline."""
+        loads = [16.0] + [1.0] * 7
+        plan = place_experts(loads, 4)
+        naive = max(sum(loads[i::4]) for i in range(4))  # round-robin
+        assert plan.bottleneck <= naive + 1e-9
+
+    def test_shared_expert_duplication_semantics(self):
+        """Duplicated experts split their load (the paper's duplication
+        trade: replicate weights to halve the bottleneck)."""
+        plan = place_experts([8.0, 1.0, 1.0, 1.0], 2, duplicate_hot=True)
+        if plan.duplicated:
+            assert plan.bottleneck < 8.0 + 1e-9

@@ -1,0 +1,100 @@
+"""Schedule validity semantics (paper §2.3)."""
+import pytest
+
+from repro.core import (
+    DAG, Instance, Schedule, ScheduleError, remove_redundant_duplicates,
+    single_worker_schedule, speedup, validate,
+)
+
+
+def chain():
+    return DAG.build(["a", "b"], [("a", "b")], {"a": 2, "b": 3},
+                     {("a", "b"): 5})
+
+
+def sched(*insts, m=2):
+    return Schedule(n_workers=m, instances=tuple(Instance(*i) for i in insts))
+
+
+class TestValidate:
+    def test_valid_sequential(self):
+        d = chain()
+        validate(sched(("a", 0, 0.0), ("b", 0, 2.0)), d)
+
+    def test_missing_node(self):
+        with pytest.raises(ScheduleError, match="never scheduled"):
+            validate(sched(("a", 0, 0.0)), chain())
+
+    def test_overlap_same_worker(self):
+        d = chain()
+        with pytest.raises(ScheduleError, match="overlap"):
+            validate(sched(("a", 0, 0.0), ("b", 0, 1.0)), d)
+
+    def test_duplicate_on_same_worker(self):
+        d = chain()
+        with pytest.raises(ScheduleError, match="duplicated within"):
+            validate(sched(("a", 0, 0.0), ("a", 0, 5.0), ("b", 0, 10.0)), d)
+
+    def test_communication_delay_enforced(self):
+        d = chain()
+        # b on another worker must wait t(a) + w = 7
+        with pytest.raises(ScheduleError, match="precedence"):
+            validate(sched(("a", 0, 0.0), ("b", 1, 4.0)), d)
+        validate(sched(("a", 0, 0.0), ("b", 1, 7.0)), d)
+
+    def test_same_worker_no_comm(self):
+        validate(sched(("a", 0, 0.0), ("b", 0, 2.0)), chain())
+
+    def test_duplication_elides_comm(self):
+        d = chain()
+        # a duplicated on both workers; b reads the local copy at t=2
+        validate(sched(("a", 0, 0.0), ("a", 1, 0.0), ("b", 1, 2.0)), d)
+
+    def test_negative_start_rejected(self):
+        with pytest.raises(ScheduleError):
+            validate(sched(("a", 0, -1.0), ("b", 0, 2.0)), chain())
+
+    def test_worker_out_of_range(self):
+        with pytest.raises(ScheduleError):
+            validate(sched(("a", 5, 0.0), ("b", 0, 2.0)), chain())
+
+
+class TestRedundantRemoval:
+    def test_redundant_dup_removed(self):
+        d = chain()
+        s = sched(("a", 0, 0.0), ("a", 1, 0.0), ("b", 0, 2.0))
+        pruned = remove_redundant_duplicates(s, d)
+        validate(pruned, d)
+        assert len(pruned.instances) == 2
+        assert all(i.worker == 0 for i in pruned.instances)
+
+    def test_useful_dup_kept(self):
+        d = DAG.build(["a", "b", "c"], [("a", "b"), ("a", "c")],
+                      {"a": 1, "b": 1, "c": 1},
+                      {("a", "b"): 10, ("a", "c"): 10})
+        s = sched(("a", 0, 0.0), ("a", 1, 0.0), ("b", 0, 1.0), ("c", 1, 1.0))
+        pruned = remove_redundant_duplicates(s, d)
+        validate(pruned, d)
+        assert len(pruned.instances) == 4  # both copies supply a consumer
+
+    def test_makespan_not_increased(self):
+        d = chain()
+        s = sched(("a", 0, 0.0), ("a", 1, 3.0), ("b", 0, 2.0))
+        assert remove_redundant_duplicates(s, d).makespan(d) <= s.makespan(d)
+
+
+class TestHelpers:
+    def test_single_worker_schedule(self):
+        d = chain()
+        s = single_worker_schedule(d)
+        validate(s, d)
+        assert s.makespan(d) == d.sequential_makespan() == 5
+
+    def test_speedup(self):
+        d = chain()
+        assert speedup(single_worker_schedule(d), d) == 1.0
+
+    def test_gantt_renders(self):
+        d = chain()
+        g = single_worker_schedule(d).gantt(d)
+        assert "P0|" in g

@@ -1,0 +1,136 @@
+"""Logical-axis sharding resolution + ParamDef machinery."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.models import transformer as T
+from repro.parallel.sharding import (
+    OPT_RULES, SERVE_RULES, TRAIN_RULES, ParamDef, logical_to_pspec, tree_pspecs,
+)
+
+MESH1 = {"data": 16, "model": 16}
+MESH2 = {"pod": 2, "data": 16, "model": 16}
+
+
+class TestResolution:
+    def test_divisibility_fallback(self):
+        # 14 heads don't divide 16 -> axis skipped
+        spec = logical_to_pspec(("embed", "heads", None), (896, 14, 64),
+                                TRAIN_RULES, MESH1)
+        assert spec == P("data")
+
+    def test_exclusivity_first_wins(self):
+        # experts takes model; ffn can't reuse it
+        spec = logical_to_pspec(("experts", "embed", "ffn"), (64, 2048, 1408),
+                                TRAIN_RULES, MESH1)
+        assert spec == P("model", "data")
+
+    def test_multi_axis_dim(self):
+        spec = logical_to_pspec(("embed",), (5120,), OPT_RULES, MESH1)
+        assert spec == P(("data", "model"))
+
+    def test_multi_axis_partial_divisibility(self):
+        # 24 % 16 == 0 fails for the pair (24 % 256 != 0): only data binds
+        spec = logical_to_pspec(("embed",), (2048 * 16,), OPT_RULES, {"data": 16, "model": 10000})
+        assert spec == P("data")
+
+    def test_batch_pod_data(self):
+        spec = logical_to_pspec(("batch", None), (256, 4096), TRAIN_RULES, MESH2)
+        assert spec == P(("pod", "data"))
+
+    def test_batch_one_replicated(self):
+        spec = logical_to_pspec(("batch", None), (1, 4096), TRAIN_RULES, MESH2)
+        assert spec == P()
+
+    def test_serve_qk_fallback(self):
+        # 40 heads fail, head_dim 128 binds model at serve time
+        spec = logical_to_pspec(("embed", "heads", "qk"), (5120, 40, 128),
+                                SERVE_RULES, MESH1)
+        assert spec == P(None, None, "model")
+
+    def test_rank_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            logical_to_pspec(("embed",), (4, 4), TRAIN_RULES, MESH1)
+
+
+class TestParamDef:
+    def test_materialize_shapes_dtypes(self):
+        d = ParamDef((4, 8), ("embed", "ffn"))
+        x = d.materialize(jax.random.PRNGKey(0))
+        assert x.shape == (4, 8) and x.dtype == jnp.bfloat16
+
+    def test_init_kinds(self):
+        z = ParamDef((3,), (None,), init="zeros").materialize(jax.random.PRNGKey(0))
+        o = ParamDef((3,), (None,), init="ones").materialize(jax.random.PRNGKey(0))
+        assert float(z.sum()) == 0 and float(o.sum()) == 3
+
+    def test_abstract_matches_materialize(self):
+        d = ParamDef((4, 8), ("embed", "ffn"), dtype=jnp.float32)
+        a = d.abstract()
+        assert a.shape == (4, 8) and a.dtype == jnp.float32
+
+
+class TestModelSpecs:
+    @pytest.mark.parametrize("arch", list_archs())
+    def test_every_param_gets_a_spec(self, arch):
+        cfg = get_config(arch)
+        defs = T.model_defs(cfg)
+        specs = tree_pspecs(defs, TRAIN_RULES, MESH1)
+        n_defs = len(jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef)))
+        n_specs = len(jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)))
+        assert n_defs == n_specs > 0
+
+    @pytest.mark.parametrize("arch", list_archs())
+    def test_specs_divide_shapes(self, arch):
+        """Every resolved spec must evenly divide its dim on both meshes."""
+        cfg = get_config(arch)
+        defs = T.model_defs(cfg)
+        for mesh in (MESH1, MESH2):
+            for rules in (TRAIN_RULES, SERVE_RULES, OPT_RULES):
+                flat, _ = jax.tree.flatten_with_path(
+                    defs, is_leaf=lambda x: isinstance(x, ParamDef))
+                for path, d in flat:
+                    spec = d.pspec(rules, mesh)
+                    for dim, names in zip(d.shape, tuple(spec) + (None,) * 8):
+                        if names is None:
+                            continue
+                        names = names if isinstance(names, tuple) else (names,)
+                        total = 1
+                        for nm in names:
+                            total *= mesh[nm]
+                        assert dim % total == 0, (path, d.shape, spec)
+
+    def test_moe_expert_sharded(self):
+        cfg = get_config("arctic-480b")
+        defs = T.model_defs(cfg)
+        spec = defs["segments"]["moe"]["p0"]["moe"]["wg"].pspec(TRAIN_RULES, MESH1)
+        # [layers, E, d, f]: experts->model (EP) + expert_ffn->data (TP):
+        # 256-way resident, never FSDP-gathered (§Perf i5)
+        assert spec == P(None, "model", None, "data")
+
+    def test_opt_rules_reach_2d_sharding(self):
+        """ZeRO: optimizer state for a 32B dense arch must shard ~256-way —
+        per-device f32 moments (m+v) must fit comfortably in HBM."""
+        import numpy as np
+        cfg = get_config("qwen2.5-32b")
+        defs = T.model_defs(cfg)
+        per_dev = 0
+        flat = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+        for d in flat:
+            spec = d.pspec(OPT_RULES, MESH1)
+            ways = 1
+            for names in spec:
+                if names is None:
+                    continue
+                names = names if isinstance(names, tuple) else (names,)
+                for nm in names:
+                    ways *= MESH1[nm]
+            per_dev += int(np.prod(d.shape)) // ways
+        moments_bytes = per_dev * 4 * 2      # m + v, f32
+        # 32.6B params -> ~260 GB of moments -> ~1 GB per chip at 256-way
+        assert moments_bytes < 2 * 2**30, moments_bytes / 2**30
+        # and big weight matrices must actually reach 2-D (256-way) sharding
+        wg = defs["segments"]["dense"]["p0"]["mlp"]["wg"].pspec(OPT_RULES, MESH1)
+        assert set(jax.tree.leaves(tuple(wg))) == {"data", "model"}
