@@ -1,0 +1,12 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: check test bench
+
+check:          ## tier-1 tests + sched_scale smoke benchmark (the CI gate)
+	bash scripts/ci.sh
+
+test:           ## tier-1 tests only
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+bench:          ## full scheduler-scaling benchmark (writes BENCH_sched.json)
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/sched_scale.py

@@ -1,0 +1,182 @@
+"""Scheduler + executor scaling benchmark — the repo's perf baseline.
+
+Times the fast-path pipeline across DAG sizes and worker counts:
+
+* ``ish`` / ``dsh``     — heap-driven :func:`repro.core.list_schedule`
+* ``plan``              — cursor-based :func:`repro.codegen.build_plan`
+* ``trace``             — shard_map MPMD executor trace (lowering) time on
+                          the ``schedule_cnn`` example models
+* reference equivalence — on sizes where the original O(V²·E) driver is
+                          affordable, asserts the fast path produces
+                          **identical** schedules (same instances, same
+                          makespan)
+
+Writes ``BENCH_sched.json`` next to the repo root and hard-fails if
+ISH on the 1000-node / density-0.10 / 8-worker random DAG exceeds the
+10 s acceptance budget, or if any equivalence check diverges.
+
+    PYTHONPATH=src python benchmarks/sched_scale.py [--quick] [--out PATH]
+"""
+import os
+
+# must be set before jax initializes — the executor-trace section meshes
+# over fake host devices
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+import time
+
+from repro.core import random_dag, validate
+from repro.core.list_scheduling import list_schedule, list_schedule_reference
+from repro.codegen import build_plan
+
+ISH_1000_8_BUDGET_S = 10.0  # acceptance bar for the fast path
+
+
+def bench_schedulers(sizes, workers, density, ref_max_nodes, results):
+    equiv_checked = 0
+    for n in sizes:
+        dag = random_dag(n, density, seed=0)
+        for m in workers:
+            for name, dup in (("ish", False), ("dsh", True)):
+                t0 = time.perf_counter()
+                sched = list_schedule(dag, m, duplicate=dup)
+                dt = time.perf_counter() - t0
+                validate(sched, dag)
+                t0 = time.perf_counter()
+                plan = build_plan(sched, dag)
+                plan_dt = time.perf_counter() - t0
+                row = {
+                    "kind": "scheduler",
+                    "algo": name,
+                    "n_nodes": n,
+                    "n_workers": m,
+                    "density": density,
+                    "schedule_s": round(dt, 4),
+                    "plan_s": round(plan_dt, 4),
+                    "makespan": sched.makespan(dag),
+                    "supersteps": len(plan.steps),
+                    "transfers": plan.n_transfers,
+                }
+                if n <= ref_max_nodes:
+                    t0 = time.perf_counter()
+                    ref = list_schedule_reference(dag, m, duplicate=dup)
+                    row["reference_s"] = round(time.perf_counter() - t0, 4)
+                    assert sched.instances == ref.instances, (
+                        f"fast path diverged from reference: {name} n={n} m={m}"
+                    )
+                    row["matches_reference"] = True
+                    row["speedup_vs_reference"] = round(
+                        row["reference_s"] / max(dt, 1e-9), 2
+                    )
+                    equiv_checked += 1
+                results.append(row)
+                print(
+                    f"{name:4s} n={n:5d} m={m}  schedule {dt:7.3f}s  "
+                    f"plan {plan_dt:6.3f}s  makespan {row['makespan']:9.1f}"
+                    + (
+                        f"  (= reference, {row['speedup_vs_reference']}x faster)"
+                        if "matches_reference" in row
+                        else ""
+                    )
+                )
+    return equiv_checked
+
+
+def bench_executor_trace(workers, results):
+    import jax
+    from repro.core import dsh
+    from repro.core.costmodel import KEYSTONE_CPU
+    from repro.codegen import build_mpmd_executor
+    from repro.models.cnn import inception_net
+
+    model = inception_net(64)
+    dag = model.to_dag(KEYSTONE_CPU, time_unit=1e-6)
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+    x = jax.numpy.zeros((1, 64, 64, 3))
+    n_dev = jax.device_count()
+    for m in workers:
+        if m > n_dev:
+            print(f"trace m={m}: skipped ({n_dev} devices available)")
+            continue
+        plan = build_plan(dsh(dag, m), dag)
+        mesh = jax.make_mesh((m,), ("workers",))
+        for fused in (True, False):
+            f = build_mpmd_executor(
+                plan, model, params, mesh, batch=1, fuse_transfers=fused
+            )
+            t0 = time.perf_counter()
+            f.lower(x)
+            dt = time.perf_counter() - t0
+            results.append({
+                "kind": "executor_trace",
+                "model": model.name,
+                "n_workers": m,
+                "fuse_transfers": fused,
+                "trace_s": round(dt, 4),
+                "supersteps": len(plan.steps),
+                "transfers": plan.n_transfers,
+            })
+            print(
+                f"trace {model.name} m={m} fused={int(fused)}: {dt:6.3f}s "
+                f"({plan.n_transfers} transfers)"
+            )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced matrix for CI smoke runs")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_sched.json"))
+    ap.add_argument("--density", type=float, default=0.10)
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip the executor trace section")
+    args = ap.parse_args()
+
+    if args.quick:
+        sizes, workers, ref_max = [100, 500], [2, 4], 100
+        trace_workers = [2]
+    else:
+        sizes, workers, ref_max = [100, 500, 1000, 2000], [2, 4, 8], 500
+        trace_workers = [2, 4, 8]
+
+    results = []
+    t_all = time.perf_counter()
+    equiv_checked = bench_schedulers(
+        sizes, workers, args.density, ref_max, results
+    )
+
+    # acceptance: ISH @ 1000 nodes / 8 workers under budget
+    ish_1000_8 = [
+        r for r in results
+        if r["kind"] == "scheduler" and r["algo"] == "ish"
+        and r["n_nodes"] == 1000 and r["n_workers"] == 8
+    ]
+    for r in ish_1000_8:
+        assert r["schedule_s"] < ISH_1000_8_BUDGET_S, (
+            f"ISH 1000/8 took {r['schedule_s']}s (budget {ISH_1000_8_BUDGET_S}s)"
+        )
+
+    if not args.no_trace:
+        bench_executor_trace(trace_workers, results)
+
+    payload = {
+        "benchmark": "sched_scale",
+        "quick": args.quick,
+        "density": args.density,
+        "equivalence_checks": equiv_checked,
+        "total_s": round(time.perf_counter() - t_all, 2),
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\nwrote {args.out}: {len(results)} rows, "
+          f"{equiv_checked} equivalence checks, {payload['total_s']}s total")
+
+
+if __name__ == "__main__":
+    main()

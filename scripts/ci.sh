@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 gate: full test suite + scheduler-scaling smoke benchmark.
+# Perf regressions fail loudly: sched_scale asserts fast-path/reference
+# schedule equivalence and the ISH time budget.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+timeout 1800 python -m pytest -x -q
+
+echo "== sched_scale smoke (--quick) =="
+timeout 600 python benchmarks/sched_scale.py --quick
+
+echo "CI OK"

@@ -50,7 +50,7 @@ def _restore_dtype(arr: np.ndarray, dtype_str: str) -> np.ndarray:
 
 
 def _flatten_with_paths(tree) -> Tuple[List[Tuple[str, Any]], Any]:
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)

@@ -1,5 +1,5 @@
 from repro.codegen.plan import ExecutionPlan, Superstep, Transfer, build_plan
-from repro.codegen.executor import interpret_plan, build_mpmd_executor
+from repro.codegen.executor import interpret_plan, build_mpmd_executor, plan_liveness
 from repro.codegen.render import render_pseudo_c
 
 __all__ = [
@@ -9,5 +9,6 @@ __all__ = [
     "build_plan",
     "interpret_plan",
     "build_mpmd_executor",
+    "plan_liveness",
     "render_pseudo_c",
 ]

@@ -3,19 +3,29 @@
 The shard_map executor is the TPU realization of ACETONE's generated
 parallel C (paper §5.3): one mesh axis ``workers`` carries the m per-core
 programs as branches of a ``lax.switch`` on ``axis_index`` (MPMD-on-SPMD);
-each comm round becomes grouped ``lax.ppermute`` collectives — the
-Writing/Reading flag protocol realized as dataflow edges, whose ordering
-guarantees are enforced by construction.
+each comm round becomes ``lax.ppermute`` collectives — the Writing/Reading
+flag protocol realized as dataflow edges, whose ordering guarantees are
+enforced by construction.
 
-Register discipline: every worker carries the full register file (one buffer
-per layer output, zero until produced locally or received).  This mirrors
-the paper's statically-allocated per-layer output variables, replicated per
-core; for layer-level CNN graphs the footprint is small and fully static —
-the certification-friendly property ACETONE cares about.
+Register discipline: a **liveness pass** over the plan gives every layer
+output a birth superstep (first computed anywhere) and a death superstep
+(last read as a compute input or transfer payload); the register file
+carried across supersteps holds only the live buffers instead of one
+zero-initialized buffer per layer.  This keeps ACETONE's fully-static
+allocation story (every buffer's lifetime is known at generation time — the
+analogue of the paper's static per-layer output variables) while shrinking
+the per-worker footprint to the schedule's actual working set.
+
+Communication discipline: instead of one tiny ``ppermute`` per communicated
+node, each superstep's transfers are grouped by ``(src, dst)`` worker pair,
+the pairs are split into permutation rounds with unique endpoints, and each
+round ships **one** flattened, concatenated payload per pair — one collective
+per round (the paper's per-channel Writing/Reading pairs, batched the way
+ACETONE's shared-memory ``comm_<src>_<dst>`` arrays batch a whole round).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +34,22 @@ import numpy as np
 from repro.codegen.plan import ExecutionPlan, Superstep, Transfer
 from repro.models.cnn import CNNModel, apply_layer
 
-__all__ = ["interpret_plan", "build_mpmd_executor"]
+__all__ = ["interpret_plan", "build_mpmd_executor", "plan_liveness"]
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map moved out of jax.experimental across JAX versions (and
+    check_vma was called check_rep); pick whichever this JAX provides."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
 
 
 def _permutation_rounds(pairs):
@@ -43,6 +68,42 @@ def _permutation_rounds(pairs):
         rounds.append(this)
         remaining = rest
     return rounds
+
+
+# --------------------------------------------------------------------------- #
+# register liveness
+# --------------------------------------------------------------------------- #
+def plan_liveness(
+    plan: ExecutionPlan, model: CNNModel
+) -> Tuple[Dict[str, int], Dict[str, int], List[Set[str]]]:
+    """Static birth/death supersteps of every register in ``plan``.
+
+    ``birth[b]`` is the first superstep where ``b`` is computed on any
+    worker; ``death[b]`` the last superstep where ``b`` is read — as a
+    compute input, as a transfer payload, or (for the sink) at plan exit
+    (``death[sink] == len(plan.steps)``, i.e. past every step).  Returns
+    ``(birth, death, live_sets)`` where ``live_sets[i]`` is the set of
+    buffers the executor must hold during superstep ``i``.
+    """
+    n = len(plan.steps)
+    birth: Dict[str, int] = {}
+    death: Dict[str, int] = {}
+    for i, step in enumerate(plan.steps):
+        for seg in step.compute:
+            for name in seg:
+                birth.setdefault(name, i)
+                death[name] = max(death.get(name, i), i)
+                spec = model.spec(name)
+                if spec.op != "input":
+                    for p in spec.inputs:
+                        death[p] = max(death.get(p, i), i)
+        for t in step.transfers:
+            death[t.node] = max(death.get(t.node, 0), i)
+    death[plan.sink] = n  # the output buffer survives the whole plan
+    live_sets = [
+        {b for b, bi in birth.items() if bi <= i <= death[b]} for i in range(n)
+    ]
+    return birth, death, live_sets
 
 
 # --------------------------------------------------------------------------- #
@@ -81,12 +142,22 @@ def build_mpmd_executor(
     mesh: jax.sharding.Mesh,
     axis: str = "workers",
     batch: int = 1,
+    liveness: bool = True,
+    fuse_transfers: bool = True,
 ) -> Callable[[jax.Array], jax.Array]:
     """Compile the plan into a jitted shard_map function ``f(x) -> y``.
 
     ``mesh`` must have ``axis`` of size ``plan.n_workers``.  Input ``x`` and
     output are replicated over the axis (P() specs); the result equals the
     sequential reference on every worker (final broadcast via psum).
+
+    ``liveness=False`` carries the full per-layer register file across every
+    superstep (the original, certification-literal layout); ``liveness=True``
+    materializes registers at their birth superstep and drops them after
+    their death superstep.  ``fuse_transfers=False`` emits one ``ppermute``
+    per communicated node per permutation round (the original layout);
+    ``fuse_transfers=True`` ships one flattened payload per ``(src, dst)``
+    pair and one collective per permutation round.
     """
     m = plan.n_workers
     if dict(zip(mesh.axis_names, mesh.devices.shape))[axis] != m:
@@ -96,9 +167,22 @@ def build_mpmd_executor(
     reg_shapes = {
         l.name: (batch, *l.out_shape) for l in model.layers
     }
+    reg_sizes = {n: int(np.prod(reg_shapes[n])) for n in reg_names}
 
-    def zeros_regs() -> Dict[str, jax.Array]:
-        return {n: jnp.zeros(reg_shapes[n], jnp.float32) for n in reg_names}
+    n_steps = len(plan.steps)
+    if liveness:
+        birth, death, _live = plan_liveness(plan, model)
+        born_at: List[List[str]] = [[] for _ in range(n_steps)]
+        dead_after: List[List[str]] = [[] for _ in range(n_steps)]
+        for b, bi in birth.items():
+            born_at[bi].append(b)
+            if death[b] < n_steps:
+                dead_after[death[b]].append(b)
+    else:
+        born_at = [[] for _ in range(n_steps)]
+        dead_after = [[] for _ in range(n_steps)]
+        if n_steps:
+            born_at[0] = list(reg_names)
 
     def compute_branch(seg: Tuple[str, ...]):
         """One worker's compute segment for one superstep."""
@@ -113,33 +197,70 @@ def build_mpmd_executor(
 
         return run
 
+    def fused_comm(regs: Dict[str, jax.Array], wid, transfers) -> None:
+        """One flattened ppermute per permutation round (mutates ``regs``)."""
+        pair_nodes: Dict[Tuple[int, int], List[str]] = {}
+        for t in transfers:
+            pair_nodes.setdefault((t.src, t.dst), []).append(t.node)
+        for round_pairs in _permutation_rounds(sorted(pair_nodes)):
+            length = max(
+                sum(reg_sizes[n] for n in pair_nodes[p]) for p in round_pairs
+            )
+            payload = jnp.zeros((length,), jnp.float32)
+            for (s, d) in round_pairs:
+                flat = jnp.concatenate(
+                    [regs[n].reshape(-1) for n in pair_nodes[(s, d)]]
+                )
+                if flat.size < length:
+                    flat = jnp.pad(flat, (0, length - flat.size))
+                payload = jnp.where(wid == s, flat, payload)
+            moved = jax.lax.ppermute(payload, axis, round_pairs)
+            for (s, d) in round_pairs:
+                off = 0
+                for n in pair_nodes[(s, d)]:
+                    sz = reg_sizes[n]
+                    chunk = moved[off : off + sz].reshape(reg_shapes[n])
+                    regs[n] = jnp.where(wid == d, chunk, regs[n])
+                    off += sz
+
+    def per_node_comm(regs: Dict[str, jax.Array], wid, transfers) -> None:
+        """Original layout: grouped ppermute per communicated node.  ppermute
+        is a strict permutation, so a multicast (one src, several dsts — the
+        paper's repeated Writing ops, e.g. Write 0_2_a/0_3_a in Fig. 11) is
+        split into sub-rounds with unique endpoints."""
+        by_node: Dict[str, List[Transfer]] = {}
+        for t in transfers:
+            by_node.setdefault(t.node, []).append(t)
+        for node, ts in sorted(by_node.items()):
+            for perm in _permutation_rounds([(t.src, t.dst) for t in ts]):
+                moved = jax.lax.ppermute(regs[node], axis, perm)
+                dsts = jnp.asarray([d for (_s, d) in perm])
+                is_dst = jnp.any(wid == dsts)
+                regs[node] = jnp.where(is_dst, moved, regs[node])
+
+    comm = fused_comm if fuse_transfers else per_node_comm
+
     def worker_fn(x: jax.Array) -> jax.Array:
         wid = jax.lax.axis_index(axis)
-        regs = zeros_regs()
-        for step in plan.steps:
+        regs: Dict[str, jax.Array] = {}
+        for i, step in enumerate(plan.steps):
+            # materialize registers born this superstep (zeroed until the
+            # owning branch writes them — all switch branches must return
+            # the same pytree, so every live buffer exists on every worker)
+            for b in born_at[i]:
+                regs[b] = jnp.zeros(reg_shapes[b], jnp.float32)
             branches = [compute_branch(seg) for seg in step.compute]
             regs = jax.lax.switch(wid, branches, regs, x)
-            # comm round: grouped ppermute per communicated node.  ppermute
-            # is a strict permutation, so a multicast (one src, several dsts
-            # — the paper's repeated Writing ops, e.g. Write 0_2_a/0_3_a in
-            # Fig. 11) is split into sub-rounds with unique endpoints.
-            by_node: Dict[str, List[Transfer]] = {}
-            for t in step.transfers:
-                by_node.setdefault(t.node, []).append(t)
-            for node, ts in sorted(by_node.items()):
-                for perm in _permutation_rounds([(t.src, t.dst) for t in ts]):
-                    moved = jax.lax.ppermute(regs[node], axis, perm)
-                    dsts = jnp.asarray([d for (_s, d) in perm])
-                    is_dst = jnp.any(wid == dsts)
-                    regs[node] = jnp.where(is_dst, moved, regs[node])
+            if step.transfers:
+                comm(regs, wid, step.transfers)
+            # retire registers whose last reader was this superstep
+            for b in dead_after[i]:
+                del regs[b]
         # broadcast the sink value to all workers (replicated output)
         out = jnp.where(wid == plan.sink_worker, regs[plan.sink], 0.0)
         return jax.lax.psum(out, axis)
 
     in_spec = jax.sharding.PartitionSpec()   # replicated input
     out_spec = jax.sharding.PartitionSpec()  # replicated output
-    fn = jax.shard_map(
-        worker_fn, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec,
-        check_vma=False,
-    )
+    fn = _shard_map(worker_fn, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec)
     return jax.jit(fn)

@@ -63,25 +63,36 @@ def build_plan(schedule: Schedule, dag: DAG) -> ExecutionPlan:
     round containing, for every worker's next blocked instance, the transfers
     of its missing inputs from their schedule-designated suppliers.  A valid
     schedule can always make progress, so this terminates.
+
+    Per-worker sub-schedules are consumed through index cursors (no
+    ``pop(0)``), adjacency comes from the DAG's cached parent map, and each
+    node's supplier candidates are pre-sorted once by ``(finish, worker)``
+    so picking the earliest-finishing *available* instance is a prefix scan
+    — O(V·m + E) per plan instead of O(V²·m).
     """
     m = schedule.n_workers
-    queues: List[List[Instance]] = [list(schedule.sub_schedule(w)) for w in range(m)]
+    subs: List[Tuple[Instance, ...]] = [schedule.sub_schedule(w) for w in range(m)]
+    heads = [0] * m                        # cursor into each sub-schedule
     have: Set[Tuple[str, int]] = set()     # (node, worker) locally available
-    by_node: Dict[str, List[Instance]] = {}
-    for inst in schedule.instances:
-        by_node.setdefault(inst.node, []).append(inst)
+    pm = dag.parent_map()
+    # supplier candidates per node, earliest-finish first (constraint 11)
+    candidates: Dict[str, List[Instance]] = {
+        n: sorted(insts, key=lambda iu: (iu.finish(dag), iu.worker))
+        for n, insts in schedule.by_node().items()
+    }
 
-    def supplier(u: str, consumer_worker: int) -> Optional[Instance]:
+    def supplier(u: str) -> Optional[Instance]:
         # only instances whose value already exists on their own worker can
         # supply; pick the earliest-finishing one (constraint-11 semantics).
-        ready = [iu for iu in by_node[u] if (u, iu.worker) in have]
-        if not ready:
-            return None  # value not produced anywhere yet — wait a round
-        return min(ready, key=lambda iu: (iu.finish(dag), iu.worker))
+        for iu in candidates[u]:
+            if (u, iu.worker) in have:
+                return iu
+        return None  # value not produced anywhere yet — wait a round
 
+    n_left = sum(len(s) for s in subs)
     steps: List[Superstep] = []
     guard = 0
-    while any(queues):
+    while n_left:
         guard += 1
         if guard > 10 * (len(dag.nodes) * m + 1):
             raise RuntimeError("plan construction did not converge (invalid schedule?)")
@@ -91,12 +102,14 @@ def build_plan(schedule: Schedule, dag: DAG) -> ExecutionPlan:
         while progress:
             progress = False
             for w in range(m):
-                while queues[w]:
-                    head = queues[w][0]
-                    if all((u, w) in have for u in dag.parents(head.node)):
+                sub = subs[w]
+                while heads[w] < len(sub):
+                    head = sub[heads[w]]
+                    if all((u, w) in have for u in pm[head.node]):
                         segs[w].append(head.node)
                         have.add((head.node, w))
-                        queues[w].pop(0)
+                        heads[w] += 1
+                        n_left -= 1
                         progress = True
                     else:
                         break
@@ -104,13 +117,13 @@ def build_plan(schedule: Schedule, dag: DAG) -> ExecutionPlan:
         transfers: List[Transfer] = []
         seen: Set[Tuple[str, int, int]] = set()
         for w in range(m):
-            if not queues[w]:
+            if heads[w] >= len(subs[w]):
                 continue
-            head = queues[w][0]
-            for u in dag.parents(head.node):
+            head = subs[w][heads[w]]
+            for u in pm[head.node]:
                 if (u, w) in have:
                     continue
-                sup = supplier(u, w)
+                sup = supplier(u)
                 if sup is None:
                     continue  # producer not ready anywhere; next round
                 key = (u, sup.worker, w)
@@ -127,7 +140,7 @@ def build_plan(schedule: Schedule, dag: DAG) -> ExecutionPlan:
 
     sinks = dag.sinks()
     sink = sinks[0]
-    sink_inst = min(by_node[sink], key=lambda i: i.finish(dag))
+    sink_inst = min(schedule.instances_of(sink), key=lambda i: i.finish(dag))
     return ExecutionPlan(
         n_workers=m,
         steps=tuple(steps),

@@ -9,6 +9,7 @@ they come from the roofline cost model (:mod:`repro.core.costmodel`).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import random as _random
 from typing import Callable, Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence, Tuple
 
@@ -34,12 +35,26 @@ class DAG:
     edges:   tuple of ``(u, v)`` pairs, data flowing u -> v.
     t:       mapping node -> execution cost on one worker (WCET analogue).
     w:       mapping edge -> communication latency if endpoints differ.
+
+    Adjacency queries (``parents``/``children``/``topological_order``/
+    ``levels``/...) are memoized on first use: the DAG is immutable, so the
+    derived structures are computed exactly once and every subsequent call is
+    a dict lookup.  Schedulers walking thousands of nodes rely on this.
     """
 
     nodes: Tuple[str, ...]
     edges: Tuple[Tuple[str, str], ...]
     t: Mapping[str, float]
     w: Mapping[Tuple[str, str], float]
+
+    def _memo(self, key: str, fn: Callable[[], object]):
+        cache = self.__dict__.get("_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_cache", cache)
+        if key not in cache:
+            cache[key] = fn()
+        return cache[key]
 
     # ------------------------------------------------------------------ #
     # construction & validation
@@ -87,50 +102,71 @@ class DAG:
     # basic structure
     # ------------------------------------------------------------------ #
     def parents(self, v: str) -> Tuple[str, ...]:
-        return tuple(u for (u, x) in self.edges if x == v)
+        return self.parent_map()[v]
 
     def children(self, v: str) -> Tuple[str, ...]:
-        return tuple(x for (u, x) in self.edges if u == v)
+        return self.child_map()[v]
 
     def parent_map(self) -> Dict[str, Tuple[str, ...]]:
-        m: Dict[str, List[str]] = {n: [] for n in self.nodes}
-        for (u, v) in self.edges:
-            m[v].append(u)
-        return {k: tuple(vs) for k, vs in m.items()}
+        def build() -> Dict[str, Tuple[str, ...]]:
+            m: Dict[str, List[str]] = {n: [] for n in self.nodes}
+            for (u, v) in self.edges:
+                m[v].append(u)
+            return {k: tuple(vs) for k, vs in m.items()}
+
+        return self._memo("parent_map", build)
 
     def child_map(self) -> Dict[str, Tuple[str, ...]]:
-        m: Dict[str, List[str]] = {n: [] for n in self.nodes}
-        for (u, v) in self.edges:
-            m[u].append(v)
-        return {k: tuple(vs) for k, vs in m.items()}
+        def build() -> Dict[str, Tuple[str, ...]]:
+            m: Dict[str, List[str]] = {n: [] for n in self.nodes}
+            for (u, v) in self.edges:
+                m[u].append(v)
+            return {k: tuple(vs) for k, vs in m.items()}
+
+        return self._memo("child_map", build)
+
+    def indegrees(self) -> Dict[str, int]:
+        """Number of parents per node (copy-safe: callers may mutate)."""
+        pm = self.parent_map()
+        return {n: len(pm[n]) for n in self.nodes}
 
     def sources(self) -> Tuple[str, ...]:
-        have_parent = {v for (_, v) in self.edges}
-        return tuple(n for n in self.nodes if n not in have_parent)
+        pm = self.parent_map()
+        return self._memo(
+            "sources", lambda: tuple(n for n in self.nodes if not pm[n])
+        )
 
     def sinks(self) -> Tuple[str, ...]:
-        have_child = {u for (u, _) in self.edges}
-        return tuple(n for n in self.nodes if n not in have_child)
+        cm = self.child_map()
+        return self._memo(
+            "sinks", lambda: tuple(n for n in self.nodes if not cm[n])
+        )
 
     def topological_order(self) -> Tuple[str, ...]:
-        """Kahn's algorithm; deterministic (input node order breaks ties)."""
+        """Kahn's algorithm; deterministic (input node order breaks ties).
+
+        Heap-ordered ready set keyed by input position — O((V+E) log V)
+        with the exact tie-breaking of the original sort-based variant.
+        """
+        return self._memo("topo", self._topological_order)
+
+    def _topological_order(self) -> Tuple[str, ...]:
         indeg = {n: 0 for n in self.nodes}
-        for (_, v) in self.edges:
-            indeg[v] += 1
-        cm = {n: [] for n in self.nodes}
+        cm: Dict[str, List[str]] = {n: [] for n in self.nodes}
         for (u, v) in self.edges:
+            indeg[v] += 1
             cm[u].append(v)
-        order: List[str] = []
-        ready = [n for n in self.nodes if indeg[n] == 0]
         pos = {n: i for i, n in enumerate(self.nodes)}
+        ready = [pos[n] for n in self.nodes if indeg[n] == 0]
+        heapq.heapify(ready)
+        order: List[str] = []
         while ready:
-            ready.sort(key=lambda n: pos[n])
-            n = ready.pop(0)
+            n = self.nodes[heapq.heappop(ready)]
             order.append(n)
             for c in cm[n]:
                 indeg[c] -= 1
                 if indeg[c] == 0:
-                    ready.append(c)
+                    heapq.heappush(ready, pos[c])
         if len(order) != len(self.nodes):
             raise GraphError("graph has a cycle")
         return tuple(order)
@@ -166,23 +202,31 @@ class DAG:
         node execution times along the longest path from ``v`` to the sink
         (communication weights excluded, as in the classical definition).
         """
-        lv: Dict[str, float] = {}
-        cm = self.child_map()
-        for n in reversed(self.topological_order()):
-            cs = cm[n]
-            lv[n] = self.t[n] + (max(lv[c] for c in cs) if cs else 0.0)
-        return lv
+
+        def build() -> Dict[str, float]:
+            lv: Dict[str, float] = {}
+            cm = self.child_map()
+            for n in reversed(self.topological_order()):
+                cs = cm[n]
+                lv[n] = self.t[n] + (max(lv[c] for c in cs) if cs else 0.0)
+            return lv
+
+        return self._memo("levels", build)
 
     def levels_with_comm(self) -> Dict[str, float]:
         """Levels including edge weights on the path (a tighter priority)."""
-        lv: Dict[str, float] = {}
-        cm = self.child_map()
-        for n in reversed(self.topological_order()):
-            cs = cm[n]
-            lv[n] = self.t[n] + (
-                max(lv[c] + self.w[(n, c)] for c in cs) if cs else 0.0
-            )
-        return lv
+
+        def build() -> Dict[str, float]:
+            lv: Dict[str, float] = {}
+            cm = self.child_map()
+            for n in reversed(self.topological_order()):
+                cs = cm[n]
+                lv[n] = self.t[n] + (
+                    max(lv[c] + self.w[(n, c)] for c in cs) if cs else 0.0
+                )
+            return lv
+
+        return self._memo("levels_with_comm", build)
 
     def sequential_makespan(self) -> float:
         """Makespan of the whole DAG on a single worker (no communication)."""

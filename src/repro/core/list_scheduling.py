@@ -12,16 +12,29 @@ queue is placed on the worker minimizing its start time.
   the start time by *duplicating* the binding ancestors onto the candidate
   worker (recursively along the binding chain), committing the duplication
   list only when the start time actually improves.
+
+Two drivers share the placement machinery:
+
+* :func:`list_schedule` — the fast path: heap-ordered ready queue with
+  incremental indegree tracking (no full-graph ready rescans, no
+  re-sorting the queue per placement) and bisect-maintained per-worker
+  timelines, O((V+E)·log V·m) up to insertion-step work.
+* :func:`list_schedule_reference` — the original O(V²·E) driver, kept as
+  the semantics oracle: both drivers visit nodes in the identical
+  ``(-level, name)`` order and share placement code, so they produce
+  identical schedules (asserted by tests and ``benchmarks/sched_scale.py``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import heapq
+from bisect import bisect_left, insort
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.graph import DAG
 from repro.core.schedule import EPS, Instance, Schedule, remove_redundant_duplicates
 
-__all__ = ["ish", "dsh", "list_schedule"]
+__all__ = ["ish", "dsh", "list_schedule", "list_schedule_reference"]
 
 
 # ---------------------------------------------------------------------- #
@@ -33,7 +46,7 @@ class _State:
     n_workers: int
     free: List[float]
     by_node: Dict[str, List[Instance]]
-    timeline: List[List[Instance]]
+    timeline: List[List[Instance]]  # per worker, kept sorted by start
     scheduled: set
 
     @staticmethod
@@ -51,7 +64,7 @@ class _State:
     def place(self, node: str, worker: int, start: float, advance_free: bool = True) -> Instance:
         inst = Instance(node=node, worker=worker, start=start)
         self.by_node.setdefault(node, []).append(inst)
-        self.timeline[worker].append(inst)
+        insort(self.timeline[worker], inst, key=lambda i: i.start)
         fin = inst.finish(self.dag)
         if advance_free:
             self.free[worker] = max(self.free[worker], fin)
@@ -103,18 +116,30 @@ def _ready_nodes(dag: DAG, scheduled: set, in_queue: set) -> List[str]:
 def _idle_segments(
     state: _State, worker: int, lo: float, hi: float
 ) -> List[Tuple[float, float]]:
-    """Idle intervals of ``worker``'s timeline intersected with [lo, hi)."""
-    busy = sorted(
-        (i.start, i.finish(state.dag))
-        for i in state.timeline[worker]
-        if i.finish(state.dag) > lo + EPS and i.start < hi - EPS
-    )
+    """Idle intervals of ``worker``'s timeline intersected with [lo, hi).
+
+    The timeline is kept sorted by start and instances never overlap, so at
+    most the instance immediately preceding the first start >= lo can
+    straddle ``lo`` — a bisect plus a bounded scan replaces the full-timeline
+    filter-and-sort.
+    """
+    tl = state.timeline[worker]
+    dag = state.dag
+    idx = bisect_left(tl, lo, key=lambda i: i.start)
+    if idx > 0:
+        idx -= 1  # possible straddler of lo
     segs: List[Tuple[float, float]] = []
     cur = lo
-    for (a, b) in busy:
-        if a > cur + EPS:
-            segs.append((cur, a))
-        cur = max(cur, b)
+    for i in range(idx, len(tl)):
+        inst = tl[i]
+        if inst.start >= hi - EPS:
+            break
+        fin = inst.finish(dag)
+        if fin <= lo + EPS:
+            continue
+        if inst.start > cur + EPS:
+            segs.append((cur, inst.start))
+        cur = max(cur, fin)
     if hi > cur + EPS:
         segs.append((cur, hi))
     return segs
@@ -139,10 +164,15 @@ def _insertion_step(
     while progress:
         progress = False
         segs = _idle_segments(state, worker, gap_start, gap_end)
+        if not segs:
+            break
         for c in list(queue):  # queue is level-ordered; scan in order
+            tc = state.dag.t[c]
             for (a, b) in segs:
+                if tc > b - a + EPS:
+                    continue  # can never fit even starting at a
                 cs = max(a, state.data_ready(c, worker))
-                if cs + state.dag.t[c] <= b + EPS:
+                if cs + tc <= b + EPS:
                     state.place(c, worker, cs, advance_free=False)
                     queue.remove(c)
                     state.scheduled.add(c)
@@ -247,7 +277,54 @@ def _dsh_start(
 
 
 # ---------------------------------------------------------------------- #
-# shared list-scheduling driver
+# shared per-node placement (identical for both drivers)
+# ---------------------------------------------------------------------- #
+def _place_head(
+    state: _State,
+    v: str,
+    n_workers: int,
+    duplicate: bool,
+    insertion: bool,
+    queue_factory,
+    levels: Dict[str, float],
+) -> List[str]:
+    """Pick a worker for queue-head ``v``, place it (with DSH duplication if
+    requested) and run the insertion step over any idle gap created.
+
+    ``queue_factory()`` yields the remaining ready nodes in ``(-level,
+    name)`` order; it is called only if an idle gap actually opened (so the
+    fast driver never sorts its ready set on gap-free placements) and the
+    returned list is mutated in place by insertion.  Returns the nodes
+    inserted into the gap.
+    """
+    if duplicate:
+        best = None
+        for p in range(n_workers):
+            s, dups = _dsh_start(state, v, p)
+            key = (s, len(dups), p)
+            if best is None or key < best[0]:
+                best = (key, p, s, dups)
+        _, p, s, dups = best
+        gap_start = state.free[p]
+        for (dn, dstart) in dups:
+            state.place(dn, p, dstart)
+        s = max(state.free[p], state.data_ready(v, p))
+    else:
+        p = min(range(n_workers), key=lambda p: (state.est(v, p), p))
+        s = state.est(v, p)
+        gap_start = state.free[p]
+
+    state.place(v, p, s)
+    state.scheduled.add(v)
+
+    # insertion step: fill the idle gap that scheduling v created
+    if insertion and s > gap_start + EPS:
+        return _insertion_step(state, p, gap_start, s, queue_factory(), levels)
+    return []
+
+
+# ---------------------------------------------------------------------- #
+# fast list-scheduling driver (heap + incremental indegrees)
 # ---------------------------------------------------------------------- #
 def list_schedule(
     dag: DAG,
@@ -256,6 +333,79 @@ def list_schedule(
     insertion: bool = True,
     prune_redundant: bool = True,
 ) -> Schedule:
+    """Heap-driven list scheduling — the fast path.
+
+    Readiness is tracked with incremental indegrees (a node enters the ready
+    heap the moment its last parent is scheduled) and the ready queue is a
+    lazy-deletion heap keyed ``(-level, name)`` — the exact pop order of the
+    reference driver's sort-per-refresh queue.  Newly ready nodes are
+    buffered until after the insertion step, mirroring the reference's
+    refresh timing, so both drivers produce identical schedules.
+    """
+    if n_workers < 1:
+        raise ValueError("need at least one worker")
+    levels = dag.levels()
+    cm = dag.child_map()
+    state = _State.fresh(dag, n_workers)
+    remaining = dag.indegrees()
+
+    heap: List[Tuple[float, str]] = []
+    in_queue: Set[str] = set()
+
+    def push(n: str) -> None:
+        heapq.heappush(heap, (-levels[n], n))
+        in_queue.add(n)
+
+    def newly_ready(n: str, out: List[str]) -> None:
+        for c in cm[n]:
+            remaining[c] -= 1
+            if remaining[c] == 0:
+                out.append(c)
+
+    for n in dag.nodes:
+        if remaining[n] == 0:
+            push(n)
+
+    while in_queue:
+        # lazy deletion: skip heap entries removed by the insertion step
+        while True:
+            _, v = heapq.heappop(heap)
+            if v in in_queue:
+                break
+        in_queue.discard(v)
+
+        pending: List[str] = []
+        inserted = _place_head(
+            state, v, n_workers, duplicate, insertion,
+            lambda: sorted(in_queue, key=lambda n: (-levels[n], n)),
+            levels,
+        )
+        newly_ready(v, pending)
+        for c in inserted:
+            in_queue.discard(c)
+            newly_ready(c, pending)
+        # refresh: push nodes made ready by v and by inserted nodes
+        for c in pending:
+            push(c)
+
+    sched = state.to_schedule()
+    if duplicate and prune_redundant:
+        sched = remove_redundant_duplicates(sched, dag)
+    return sched
+
+
+# ---------------------------------------------------------------------- #
+# reference driver (original full-rescan semantics oracle)
+# ---------------------------------------------------------------------- #
+def list_schedule_reference(
+    dag: DAG,
+    n_workers: int,
+    duplicate: bool = False,
+    insertion: bool = True,
+    prune_redundant: bool = True,
+) -> Schedule:
+    """The original O(V·(V+E)) driver: full ready-rescan + sort per
+    placement.  Kept as the oracle for fast-path equivalence tests."""
     if n_workers < 1:
         raise ValueError("need at least one worker")
     levels = dag.levels()
@@ -273,33 +423,9 @@ def list_schedule(
     while queue:
         v = queue.pop(0)
         in_queue.discard(v)
-
-        if duplicate:
-            best = None
-            for p in range(n_workers):
-                s, dups = _dsh_start(state, v, p)
-                key = (s, len(dups), p)
-                if best is None or key < best[0]:
-                    best = (key, p, s, dups)
-            _, p, s, dups = best
-            gap_start = state.free[p]
-            for (dn, dstart) in dups:
-                state.place(dn, p, dstart)
-            s = max(state.free[p], state.data_ready(v, p))
-        else:
-            p = min(range(n_workers), key=lambda p: (state.est(v, p), p))
-            s = state.est(v, p)
-            gap_start = state.free[p]
-
-        inst = state.place(v, p, s)
-        state.scheduled.add(v)
-
-        # insertion step: fill the idle gap that scheduling v created
-        if insertion and s > gap_start + EPS:
-            _insertion_step(state, p, gap_start, s, queue, levels)
-            # rebuild in_queue after removals
-            in_queue.intersection_update(queue)
-
+        _place_head(state, v, n_workers, duplicate, insertion, lambda: queue, levels)
+        # rebuild in_queue after insertion-step removals
+        in_queue.intersection_update(queue)
         refresh_queue()
 
     sched = state.to_schedule()

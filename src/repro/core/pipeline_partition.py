@@ -125,11 +125,20 @@ def dag_partition(dag: DAG, p: int, heuristic: str = "dsh") -> PipelinePlan:
     order.sort()
     stages = tuple(nodes for (_s, _w, nodes) in order)
     scost = tuple(sum(dag.t[n] for n in nodes) for nodes in stages)
-    # boundary comm: sum of edge weights crossing consecutive stages
-    bcomm = []
-    for a, b in zip(stages, stages[1:]):
-        sa, sb = set(a), set(b)
-        bcomm.append(sum(w for (u, v), w in dag.w.items() if u in sa and v in sb))
+    # boundary comm: sum of edge weights crossing consecutive stages.
+    # One pass over the edges with a node->stage index instead of a
+    # per-boundary rescan of dag.w.
+    # (a DSH-duplicated node can sit in several stages, so the index maps
+    # node -> all its stages)
+    stage_of: Dict[str, List[int]] = {}
+    for si, nodes in enumerate(stages):
+        for n in nodes:
+            stage_of.setdefault(n, []).append(si)
+    bcomm = [0.0] * max(len(stages) - 1, 0)
+    for (u, v), w in dag.w.items():
+        for su in stage_of[u]:
+            if su + 1 < len(stages) and su + 1 in stage_of[v]:
+                bcomm[su] += w
     return PipelinePlan(
         n_stages=len(stages),
         stages=stages,

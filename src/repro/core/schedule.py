@@ -42,19 +42,53 @@ class Instance:
 
 @dataclasses.dataclass(frozen=True)
 class Schedule:
-    """Immutable schedule over ``n_workers`` workers."""
+    """Immutable schedule over ``n_workers`` workers.
+
+    Like :class:`~repro.core.graph.DAG`, per-node and per-worker instance
+    indexes are memoized on first use so repeated queries (validation, plan
+    construction, availability argmins) don't rescan the instance tuple.
+    """
 
     n_workers: int
     instances: Tuple[Instance, ...]
 
+    def _memo(self, key: str, fn):
+        cache = self.__dict__.get("_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_cache", cache)
+        if key not in cache:
+            cache[key] = fn()
+        return cache[key]
+
     # -------------------------------------------------------------- #
+    def by_node(self) -> Dict[str, Tuple[Instance, ...]]:
+        """node -> its instances (cached)."""
+
+        def build() -> Dict[str, Tuple[Instance, ...]]:
+            m: Dict[str, List[Instance]] = {}
+            for i in self.instances:
+                m.setdefault(i.node, []).append(i)
+            return {k: tuple(v) for k, v in m.items()}
+
+        return self._memo("by_node", build)
+
+    def by_worker(self) -> Dict[int, Tuple[Instance, ...]]:
+        """worker -> start-sorted sub-schedule (cached)."""
+
+        def build() -> Dict[int, Tuple[Instance, ...]]:
+            m: Dict[int, List[Instance]] = {w: [] for w in range(self.n_workers)}
+            for i in self.instances:
+                m.setdefault(i.worker, []).append(i)
+            return {k: tuple(sorted(v, key=lambda i: i.start)) for k, v in m.items()}
+
+        return self._memo("by_worker", build)
+
     def sub_schedule(self, worker: int) -> Tuple[Instance, ...]:
-        return tuple(
-            sorted((i for i in self.instances if i.worker == worker), key=lambda i: i.start)
-        )
+        return self.by_worker().get(worker, ())
 
     def instances_of(self, node: str) -> Tuple[Instance, ...]:
-        return tuple(i for i in self.instances if i.node == node)
+        return self.by_node().get(node, ())
 
     def makespan(self, dag: DAG) -> float:
         if not self.instances:
@@ -68,28 +102,29 @@ class Schedule:
         return len(self.instances) - len(dag.nodes)
 
     # -------------------------------------------------------------- #
-    def earliest_availability(self, dag: DAG, node: str, worker: int) -> float:
-        """Earliest time node's output is usable on ``worker``.
+    def earliest_availability(
+        self, dag: DAG, node: str, worker: int, consumer: str
+    ) -> float:
+        """Earliest time ``node``'s output is usable on ``worker`` for the
+        edge ``(node, consumer)``.
 
-        ``min`` over instances of ``finish + (0 if same worker else w)`` —
-        the executor picks the best source instance (improved-encoding
-        semantics; w is edge-dependent so the caller passes the edge weight
-        via :meth:`data_ready`).
+        ``min`` over instances of ``finish + (0 if same worker else
+        w(node, consumer))`` — the executor picks the best source instance
+        (improved-encoding earliest-finish semantics, constraint (11)).
         """
-        raise NotImplementedError  # availability depends on the edge; use data_ready
+        insts = self.instances_of(node)
+        if not insts:
+            raise ScheduleError(f"node {node} unscheduled")
+        we = dag.w[(node, consumer)]
+        return min(
+            i.finish(dag) + (0.0 if i.worker == worker else we) for i in insts
+        )
 
     def data_ready(self, dag: DAG, node: str, worker: int) -> float:
         """Earliest start time of ``node`` on ``worker`` wrt data only."""
         ready = 0.0
         for u in dag.parents(node):
-            insts = self.instances_of(u)
-            if not insts:
-                raise ScheduleError(f"parent {u} of {node} unscheduled")
-            we = dag.w[(u, node)]
-            arrival = min(
-                i.finish(dag) + (0.0 if i.worker == worker else we) for i in insts
-            )
-            ready = max(ready, arrival)
+            ready = max(ready, self.earliest_availability(dag, u, worker, node))
         return ready
 
     def gantt(self, dag: DAG, width: int = 72) -> str:
@@ -112,7 +147,6 @@ class Schedule:
 def validate(schedule: Schedule, dag: DAG) -> None:
     """Raise :class:`ScheduleError` unless the schedule is valid (paper §2.3)."""
     seen_nodes = set()
-    per_worker: Dict[int, List[Instance]] = {}
     for inst in schedule.instances:
         if inst.node not in dag.t:
             raise ScheduleError(f"unknown node {inst.node}")
@@ -121,18 +155,16 @@ def validate(schedule: Schedule, dag: DAG) -> None:
         if inst.start < -EPS:
             raise ScheduleError(f"negative start for {inst}")
         seen_nodes.add(inst.node)
-        per_worker.setdefault(inst.worker, []).append(inst)
 
     missing = set(dag.nodes) - seen_nodes
     if missing:
         raise ScheduleError(f"nodes never scheduled: {sorted(missing)}")
 
     # at most once per worker + no overlap on a worker
-    for p, insts in per_worker.items():
+    for p, insts in schedule.by_worker().items():
         names = [i.node for i in insts]
         if len(names) != len(set(names)):
             raise ScheduleError(f"node duplicated within worker {p}")
-        insts = sorted(insts, key=lambda i: i.start)
         for a, b in zip(insts, insts[1:]):
             if a.finish(dag) > b.start + EPS:
                 raise ScheduleError(
@@ -141,9 +173,7 @@ def validate(schedule: Schedule, dag: DAG) -> None:
                 )
 
     # precedence + communication
-    by_node: Dict[str, List[Instance]] = {}
-    for inst in schedule.instances:
-        by_node.setdefault(inst.node, []).append(inst)
+    by_node = schedule.by_node()
     for (u, v) in dag.edges:
         we = dag.w[(u, v)]
         for iv in by_node[v]:
@@ -167,9 +197,7 @@ def remove_redundant_duplicates(schedule: Schedule, dag: DAG) -> Schedule:
     instances are redundant and removed.  The result remains valid and has
     an identical makespan contribution for every kept instance.
     """
-    by_node: Dict[str, List[Instance]] = {}
-    for inst in schedule.instances:
-        by_node.setdefault(inst.node, []).append(inst)
+    by_node = schedule.by_node()
 
     keep: set = set()
     stack: List[Instance] = []

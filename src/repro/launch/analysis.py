@@ -33,6 +33,15 @@ HBM_BW = 819e9
 ICI_BW = 50e9
 HBM_CAP = 16 * 2**30
 
+def _cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: older
+    releases return a one-element list of dicts, newer ones a flat dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
@@ -132,7 +141,7 @@ def analyze_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: jax.sharding.Mesh,
     t_compile = time.monotonic() - t0
 
     n_dev = mesh.devices.size
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_analysis_dict(compiled)
     flops = float(ca.get("flops", 0.0))
     bytes_acc = float(ca.get("bytes accessed", 0.0))
     try:
@@ -242,7 +251,7 @@ def validate_probe(arch: str, kind: str, mesh: jax.sharding.Mesh,
         lowered, meta = lower_cell(cfg, shape, mesh, moe_impl=moe_impl,
                                    microbatches=1, bf16_moments=False)
         compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_analysis_dict(compiled)
     flops = float(ca.get("flops", 0.0))
     bytes_acc = float(ca.get("bytes accessed", 0.0))
     coll = sum(collective_bytes(compiled.as_text()).values())

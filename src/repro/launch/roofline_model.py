@@ -57,7 +57,7 @@ class Terms:
 def _ways(defs, rules, mesh_shape) -> Dict[str, int]:
     """Per-tensor sharding way-counts split into model vs data axes."""
     out = {}
-    flat, _ = __import__("jax").tree.flatten_with_path(
+    flat, _ = __import__("jax").tree_util.tree_flatten_with_path(
         defs, is_leaf=lambda x: isinstance(x, ParamDef))
     for path, d in flat:
         spec = d.pspec(rules, mesh_shape)
@@ -86,7 +86,7 @@ def param_stats(cfg: ArchConfig, rules, mesh_shape) -> Dict[str, float]:
     import jax as _jax
 
     defs = T.model_defs(cfg)
-    flat, _ = _jax.tree.flatten_with_path(
+    flat, _ = _jax.tree_util.tree_flatten_with_path(
         defs, is_leaf=lambda x: isinstance(x, ParamDef))
     shard_b = use_b = gather_b = n_params = 0.0
     for _path, d in flat:

@@ -1,0 +1,60 @@
+"""Hypothesis shim: real hypothesis when installed, deterministic fallback
+otherwise.
+
+The tier-1 environment does not guarantee ``hypothesis`` (see
+requirements.txt for the full dev set), so property tests import ``given``/
+``settings``/``st`` from here.  The fallback reproduces the tiny strategy
+surface the tests use (``integers``, ``sampled_from``, ``booleans``) by
+drawing ``max_examples`` samples from a fixed-seed PRNG — deterministic,
+no shrinking, but the same properties get exercised.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+    st = _Strategies()
+
+    def settings(max_examples=20, **_kwargs):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # Note: plain (self) signature — pytest must not mistake the
+            # strategy parameters for fixtures.  All users are test methods.
+            def wrapper(self):
+                rng = random.Random(0)
+                for _ in range(getattr(wrapper, "_max_examples", 20)):
+                    fn(self, *(s.sample(rng) for s in strategies))
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

@@ -1,6 +1,6 @@
 """DAG model tests (paper §2.2) — structure, costs, generators."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import DAG, GraphError, density, random_dag
 

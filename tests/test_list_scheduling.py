@@ -1,6 +1,6 @@
 """ISH / DSH heuristics (paper §3.3, Figs. 4-5) + paper Fig. 7 observations."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import DAG, dsh, ish, list_schedule, random_dag, speedup, validate
 

@@ -89,7 +89,7 @@ class TestModelSpecs:
         defs = T.model_defs(cfg)
         for mesh in (MESH1, MESH2):
             for rules in (TRAIN_RULES, SERVE_RULES, OPT_RULES):
-                flat, _ = jax.tree.flatten_with_path(
+                flat, _ = jax.tree_util.tree_flatten_with_path(
                     defs, is_leaf=lambda x: isinstance(x, ParamDef))
                 for path, d in flat:
                     spec = d.pspec(rules, mesh)
