@@ -4,6 +4,10 @@ Times the fast-path pipeline across DAG sizes and worker counts:
 
 * ``ish`` / ``dsh``     — heap-driven :func:`repro.core.list_schedule`
 * ``plan``              — cursor-based :func:`repro.codegen.build_plan`
+* ``sliced``            — operator-granularity scheduling: lenet5/inception
+                          lowered by :func:`repro.models.slicing.slice_model`
+                          vs their layer-granularity DAGs (makespan win
+                          asserted on 8 workers)
 * ``trace``             — shard_map MPMD executor trace (lowering) time on
                           the ``schedule_cnn`` example models
 * reference equivalence — on sizes where the original O(V²·E) driver is
@@ -13,9 +17,14 @@ Times the fast-path pipeline across DAG sizes and worker counts:
 
 Writes ``BENCH_sched.json`` next to the repo root and hard-fails if
 ISH on the 1000-node / density-0.10 / 8-worker random DAG exceeds the
-10 s acceptance budget, or if any equivalence check diverges.
+10 s acceptance budget, if any equivalence check diverges, or — the trend
+gate — if any scheduler row regresses more than 2x *and* more than 250 ms
+against the committed baseline (``--baseline``; the absolute slack keeps
+millisecond rows and cross-machine variance from flaking the gate while a
+complexity blowup on any row still trips it).
 
     PYTHONPATH=src python benchmarks/sched_scale.py [--quick] [--out PATH]
+        [--baseline PATH]
 """
 import os
 
@@ -32,6 +41,11 @@ from repro.core.list_scheduling import list_schedule, list_schedule_reference
 from repro.codegen import build_plan
 
 ISH_1000_8_BUDGET_S = 10.0  # acceptance bar for the fast path
+DSH_ISH_RATIO_BUDGET = 6.0  # gross-regression bar for the memoized DSH search
+TREND_FACTOR = 2.0          # fail if a row gets >2x slower than baseline...
+TREND_SLACK_S = 0.25        # ...and slower by this much absolutely (so fast
+                            # rows still catch complexity blowups without
+                            # millisecond noise or cross-machine 2x flakes)
 
 
 def bench_schedulers(sizes, workers, density, ref_max_nodes, results):
@@ -84,6 +98,94 @@ def bench_schedulers(sizes, workers, density, ref_max_nodes, results):
     return equiv_checked
 
 
+def bench_sliced(workers, results, slice_factor=8):
+    """Operator-granularity vs layer-granularity scheduling (ISSUE 2)."""
+    from repro.core import validate as validate_sched
+    from repro.core.costmodel import KEYSTONE_CPU
+    from repro.models.cnn import inception_net, lenet5
+    from repro.models.slicing import slice_model
+
+    # always include 8 workers: the sliced-beats-layer acceptance gate below
+    # must run in the --quick CI smoke too (sliced DAGs are tiny, so this
+    # costs milliseconds)
+    workers = sorted(set(workers) | {8})
+    for model in (lenet5(28), inception_net(64)):
+        dag = model.to_dag(KEYSTONE_CPU, time_unit=1e-6)
+        sliced = slice_model(model, slice_factor)
+        sdag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
+        for m in workers:
+            for name, dup in (("ish", False), ("dsh", True)):
+                layer_mk = list_schedule(dag, m, duplicate=dup).makespan(dag)
+                t0 = time.perf_counter()
+                sched = list_schedule(sdag, m, duplicate=dup)
+                dt = time.perf_counter() - t0
+                validate_sched(sched, sdag)
+                mk = sched.makespan(sdag)
+                results.append({
+                    "kind": "sliced_scheduler",
+                    "model": model.name,
+                    "algo": name,
+                    "slice_factor": slice_factor,
+                    "n_nodes": len(sdag.nodes),
+                    "n_workers": m,
+                    "schedule_s": round(dt, 4),
+                    "makespan": mk,
+                    "layer_makespan": layer_mk,
+                    "speedup_vs_layer": round(layer_mk / mk, 2),
+                })
+                print(
+                    f"{name:4s} sliced {model.name:9s} x{slice_factor} m={m}  "
+                    f"schedule {dt:7.3f}s  makespan {mk:9.1f} "
+                    f"(layer {layer_mk:9.1f}, {layer_mk / mk:.2f}x)"
+                )
+                if m >= 8:
+                    # acceptance: slicing must beat layer granularity where
+                    # the layer DAG is narrower than the worker pool
+                    assert mk < layer_mk, (
+                        f"sliced {model.name} m={m} {name}: {mk} !< {layer_mk}"
+                    )
+
+
+def check_trend(results, baseline_path):
+    """Fail on >TREND_FACTOR slowdowns vs the committed baseline rows."""
+
+    def key(r):
+        if r.get("kind") == "scheduler":
+            return ("scheduler", r["algo"], r["n_nodes"], r["n_workers"],
+                    r.get("density"))
+        if r.get("kind") == "sliced_scheduler":
+            return ("sliced", r["model"], r["algo"], r["slice_factor"],
+                    r["n_workers"])
+        return None
+
+    if not os.path.exists(baseline_path):
+        print(f"trend: no baseline at {baseline_path}; skipping")
+        return 0
+    with open(baseline_path) as f:
+        base_rows = json.load(f).get("results", [])
+    base = {key(r): r for r in base_rows if key(r)}
+    checked = 0
+    failures = []
+    for r in results:
+        b = base.get(key(r))
+        if b is None:
+            continue
+        for field in ("schedule_s", "plan_s"):
+            bv, cv = b.get(field), r.get(field)
+            if bv is None or cv is None:
+                continue
+            checked += 1
+            if cv > max(TREND_FACTOR * bv, bv + TREND_SLACK_S):
+                failures.append(
+                    f"{key(r)} {field}: {cv}s vs baseline {bv}s "
+                    f"(> {TREND_FACTOR}x and > +{TREND_SLACK_S}s)"
+                )
+    if failures:
+        raise AssertionError("perf trend regression:\n" + "\n".join(failures))
+    print(f"trend: {checked} timings within {TREND_FACTOR}x of baseline")
+    return checked
+
+
 def bench_executor_trace(workers, results):
     import jax
     from repro.core import dsh
@@ -129,9 +231,10 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
                     help="reduced matrix for CI smoke runs")
-    ap.add_argument("--out", default=os.path.join(
-        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        "BENCH_sched.json"))
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    ap.add_argument("--out", default=os.path.join(repo_root, "BENCH_sched.json"))
+    ap.add_argument("--baseline", default=os.path.join(repo_root, "BENCH_sched.json"),
+                    help="committed baseline for the 2x trend gate")
     ap.add_argument("--density", type=float, default=0.10)
     ap.add_argument("--no-trace", action="store_true",
                     help="skip the executor trace section")
@@ -149,6 +252,7 @@ def main():
     equiv_checked = bench_schedulers(
         sizes, workers, args.density, ref_max, results
     )
+    bench_sliced(workers, results)
 
     # acceptance: ISH @ 1000 nodes / 8 workers under budget
     ish_1000_8 = [
@@ -161,6 +265,21 @@ def main():
             f"ISH 1000/8 took {r['schedule_s']}s (budget {ISH_1000_8_BUDGET_S}s)"
         )
 
+    # acceptance: memoized DSH stays within a small multiple of ISH
+    by_algo = {
+        r["algo"]: r["schedule_s"] for r in results
+        if r["kind"] == "scheduler" and r["n_nodes"] == 2000
+        and r["n_workers"] == 8
+    }
+    if "ish" in by_algo and "dsh" in by_algo:
+        ratio = by_algo["dsh"] / max(by_algo["ish"], 1e-9)
+        assert ratio < DSH_ISH_RATIO_BUDGET, (
+            f"DSH/ISH at 2000/8 is {ratio:.1f}x (budget {DSH_ISH_RATIO_BUDGET}x)"
+        )
+
+    # trend gate against the committed baseline (load before overwriting)
+    trend_checked = check_trend(results, args.baseline)
+
     if not args.no_trace:
         bench_executor_trace(trace_workers, results)
 
@@ -169,6 +288,7 @@ def main():
         "quick": args.quick,
         "density": args.density,
         "equivalence_checks": equiv_checked,
+        "trend_checks": trend_checked,
         "total_s": round(time.perf_counter() - t_all, 2),
         "results": results,
     }

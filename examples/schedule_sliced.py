@@ -1,0 +1,92 @@
+"""Operator-granularity scheduling demo: slice -> schedule -> execute.
+
+Lowers a layer-DAG model into per-tile slice tasks (conv/pool channel tiles,
+dense row blocks, attention head blocks), schedules the sliced DAG with the
+fast-path heuristics, optionally tightens the result with a warm-started
+branch-and-bound budget, and executes the sliced plan — verifying it is
+numerically identical to the unsliced sequential reference.
+
+    PYTHONPATH=src python examples/schedule_sliced.py \
+        [--model inception|lenet5|transformer] [--workers 8] [--factor 8] \
+        [--spatial] [--tighten-s 0]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.codegen import build_plan, interpret_plan, plan_summary
+from repro.core import dsh, ish, speedup, tighten_schedule, validate
+from repro.core.costmodel import KEYSTONE_CPU
+from repro.models.cnn import (
+    inception_net,
+    lenet5,
+    run_sequential,
+    transformer_block,
+)
+from repro.models.slicing import slice_model, slicing_summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", choices=("inception", "lenet5", "transformer"),
+                    default="inception")
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--factor", type=int, default=8)
+    ap.add_argument("--spatial", action="store_true",
+                    help="tile conv/pool along output rows instead of channels")
+    ap.add_argument("--tighten-s", type=float, default=0.0,
+                    help="warm-started branch-and-bound budget (0 = off)")
+    args = ap.parse_args()
+
+    model = {
+        "inception": lambda: inception_net(64),
+        "lenet5": lambda: lenet5(28),
+        "transformer": lambda: transformer_block(64, 128, 8, 256),
+    }[args.model]()
+    sliced = slice_model(model, args.factor, spatial=args.spatial)
+    print(f"== {model.name}: {slicing_summary(model, sliced)} ==")
+
+    dag = model.to_dag(KEYSTONE_CPU, time_unit=1e-6)
+    sdag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
+    print(f"layer DAG: {len(dag.nodes)} tasks, max parallelism "
+          f"{dag.max_parallelism()};  sliced DAG: {len(sdag.nodes)} tasks, "
+          f"max parallelism {sdag.max_parallelism()}")
+
+    best = None
+    for name, fn in (("ISH", ish), ("DSH", dsh)):
+        s_layer = fn(dag, args.workers)
+        s_slice = fn(sdag, args.workers)
+        validate(s_slice, sdag)
+        mk_l, mk_s = s_layer.makespan(dag), s_slice.makespan(sdag)
+        print(f"{name}-{args.workers}: layer makespan {mk_l:9.1f} us "
+              f"(speedup {speedup(s_layer, dag):4.2f})  |  sliced "
+              f"{mk_s:9.1f} us (speedup {speedup(s_slice, sdag):4.2f}, "
+              f"{mk_l / mk_s:4.2f}x vs layer)")
+        if best is None or mk_s < best[1]:
+            best = (s_slice, mk_s)
+
+    sched = best[0]
+    if args.tighten_s > 0:
+        r = tighten_schedule(sdag, args.workers, sched, timeout_s=args.tighten_s)
+        print(f"warm-started B&B ({args.tighten_s}s budget): "
+              f"{best[1]:9.1f} -> {r.makespan:9.1f} us "
+              f"({'optimal' if r.optimal else 'anytime'})")
+        sched = r.schedule
+
+    plan = build_plan(sched, sdag)
+    ps = plan_summary(plan, sdag)
+    print(f"plan: {ps['supersteps']} supersteps, {ps['transfers']} transfers "
+          f"across {ps['origins']} originating layers "
+          f"(max {ps['max_transfers_per_origin']} transfers per layer)")
+
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+    x = jax.random.normal(key, (2, *model.layers[0].out_shape))
+    ref = run_sequential(model, params, x)
+    y = interpret_plan(plan, sliced, params, x)
+    print(f"max|sliced parallel - sequential| = {float(jnp.abs(y - ref).max()):.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,12 @@
 #!/usr/bin/env bash
 # Tier-1 gate: full test suite + scheduler-scaling smoke benchmark.
 # Perf regressions fail loudly: sched_scale asserts fast-path/reference
-# schedule equivalence and the ISH time budget.
+# schedule equivalence, the ISH time budget, the sliced-vs-layer makespan
+# win on 8 workers, and the 2x trend gate against the committed
+# BENCH_sched.json (the DSH/ISH ratio bar needs the 2000-node matrix and
+# only runs in the full `make bench`).
+# The smoke run writes to a scratch path so the committed baseline is
+# only refreshed deliberately (make bench).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -9,7 +14,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 pytest =="
 timeout 1800 python -m pytest -x -q
 
-echo "== sched_scale smoke (--quick) =="
-timeout 600 python benchmarks/sched_scale.py --quick
+echo "== sched_scale smoke (--quick, trend-gated) =="
+timeout 600 python benchmarks/sched_scale.py --quick \
+  --out "$(mktemp -d)/BENCH_sched.json" --baseline BENCH_sched.json
 
 echo "CI OK"

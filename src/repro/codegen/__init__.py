@@ -1,4 +1,4 @@
-from repro.codegen.plan import ExecutionPlan, Superstep, Transfer, build_plan
+from repro.codegen.plan import ExecutionPlan, Superstep, Transfer, build_plan, plan_summary
 from repro.codegen.executor import interpret_plan, build_mpmd_executor, plan_liveness
 from repro.codegen.render import render_pseudo_c
 
@@ -7,6 +7,7 @@ __all__ = [
     "Superstep",
     "Transfer",
     "build_plan",
+    "plan_summary",
     "interpret_plan",
     "build_mpmd_executor",
     "plan_liveness",

@@ -249,8 +249,9 @@ def build_mpmd_executor(
             # the same pytree, so every live buffer exists on every worker)
             for b in born_at[i]:
                 regs[b] = jnp.zeros(reg_shapes[b], jnp.float32)
-            branches = [compute_branch(seg) for seg in step.compute]
-            regs = jax.lax.switch(wid, branches, regs, x)
+            if any(step.compute):  # sliced plans emit transfer-only rounds
+                branches = [compute_branch(seg) for seg in step.compute]
+                regs = jax.lax.switch(wid, branches, regs, x)
             if step.transfers:
                 comm(regs, wid, step.transfers)
             # retire registers whose last reader was this superstep

@@ -20,7 +20,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 from repro.core.graph import DAG
 from repro.core.schedule import Instance, Schedule
 
-__all__ = ["Transfer", "Superstep", "ExecutionPlan", "build_plan"]
+__all__ = ["Transfer", "Superstep", "ExecutionPlan", "build_plan", "plan_summary"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,7 +55,7 @@ class ExecutionPlan:
         return sum(out_bytes[t.node] for s in self.steps for t in s.transfers)
 
 
-def build_plan(schedule: Schedule, dag: DAG) -> ExecutionPlan:
+def build_plan(schedule: Schedule, dag: DAG, lookahead: bool = True) -> ExecutionPlan:
     """Chop a valid schedule into compute/comm supersteps.
 
     Greedy simulation: repeatedly (1) let every worker run the maximal prefix
@@ -63,6 +63,17 @@ def build_plan(schedule: Schedule, dag: DAG) -> ExecutionPlan:
     round containing, for every worker's next blocked instance, the transfers
     of its missing inputs from their schedule-designated suppliers.  A valid
     schedule can always make progress, so this terminates.
+
+    ``lookahead=True`` additionally ships every *future* cross-worker input
+    of each sub-schedule in the first comm round after its producer exists
+    (a "want list" computed once up front — each want ships exactly once, so
+    the eager mode costs O(E) total, not a per-round rescan).  Inputs the
+    worker computes itself before the consuming instance are never wants.
+    Operator-granularity plans are dominated by slice tasks whose inputs
+    finish long before the consumer's turn; pre-shipping them collapses long
+    chains of one-transfer supersteps into a few wide rounds, which is what
+    keeps sliced MPMD traces shallow.  ``lookahead=False`` reproduces the
+    certification-literal head-only rounds.
 
     Per-worker sub-schedules are consumed through index cursors (no
     ``pop(0)``), adjacency comes from the DAG's cached parent map, and each
@@ -89,6 +100,30 @@ def build_plan(schedule: Schedule, dag: DAG) -> ExecutionPlan:
                 return iu
         return None  # value not produced anywhere yet — wait a round
 
+    # want list: every (input, worker) pair some instance will need from
+    # remote — i.e. the input is not computed earlier on that worker's own
+    # sub-schedule.  Wants move to ``shippable`` the moment the producer
+    # first materializes anywhere and are shipped in the next comm round.
+    wants_by_node: Dict[str, List[int]] = {}
+    produced: Set[str] = set()
+    shippable: List[Tuple[str, int]] = []
+    if lookahead:
+        want_seen: Set[Tuple[str, int]] = set()
+        for w in range(m):
+            local_before: Set[str] = set()
+            for inst in subs[w]:
+                for u in pm[inst.node]:
+                    if u not in local_before and (u, w) not in want_seen:
+                        want_seen.add((u, w))
+                        wants_by_node.setdefault(u, []).append(w)
+                local_before.add(inst.node)
+
+    def mark_produced(node: str) -> None:
+        if node not in produced:
+            produced.add(node)
+            for w in wants_by_node.pop(node, ()):  # noqa: B909 (pop is safe)
+                shippable.append((node, w))
+
     n_left = sum(len(s) for s in subs)
     steps: List[Superstep] = []
     guard = 0
@@ -108,6 +143,7 @@ def build_plan(schedule: Schedule, dag: DAG) -> ExecutionPlan:
                     if all((u, w) in have for u in pm[head.node]):
                         segs[w].append(head.node)
                         have.add((head.node, w))
+                        mark_produced(head.node)
                         heads[w] += 1
                         n_left -= 1
                         progress = True
@@ -116,21 +152,31 @@ def build_plan(schedule: Schedule, dag: DAG) -> ExecutionPlan:
         # ---- comm phase ------------------------------------------------ #
         transfers: List[Transfer] = []
         seen: Set[Tuple[str, int, int]] = set()
-        for w in range(m):
-            if heads[w] >= len(subs[w]):
-                continue
-            head = subs[w][heads[w]]
-            for u in pm[head.node]:
-                if (u, w) in have:
+
+        def ship(u: str, w: int) -> None:
+            sup = supplier(u)
+            if sup is None:
+                return  # producer not ready anywhere; next round
+            key = (u, sup.worker, w)
+            if key not in seen:
+                seen.add(key)
+                transfers.append(Transfer(node=u, src=sup.worker, dst=w))
+            have.add((u, w))
+
+        if lookahead:
+            # ship every want whose producer materialized this superstep
+            for (u, w) in shippable:
+                if (u, w) not in have:
+                    ship(u, w)
+            shippable.clear()
+        else:
+            for w in range(m):
+                if heads[w] >= len(subs[w]):
                     continue
-                sup = supplier(u)
-                if sup is None:
-                    continue  # producer not ready anywhere; next round
-                key = (u, sup.worker, w)
-                if key not in seen:
-                    seen.add(key)
-                    transfers.append(Transfer(node=u, src=sup.worker, dst=w))
-                have.add((u, w))
+                head = subs[w][heads[w]]
+                for u in pm[head.node]:
+                    if (u, w) not in have:
+                        ship(u, w)
         if not any(segs) and not transfers:
             raise RuntimeError("deadlocked plan: no compute and no transfers")
         steps.append(Superstep(
@@ -148,3 +194,32 @@ def build_plan(schedule: Schedule, dag: DAG) -> ExecutionPlan:
         sink=sink,
         sink_worker=sink_inst.worker,
     )
+
+
+def plan_summary(plan: ExecutionPlan, dag: DAG) -> Dict[str, object]:
+    """Slice-aware plan statistics, grouped by originating layer.
+
+    Uses the DAG's node metadata (``origin``) so operator-granularity plans
+    report per-*layer* compute/transfer distribution rather than thousands of
+    per-tile rows.  For layer-granularity DAGs origins are the nodes
+    themselves.
+    """
+    compute_by_origin: Dict[str, int] = {}
+    for step in plan.steps:
+        for seg in step.compute:
+            for n in seg:
+                o = dag.origin(n)
+                compute_by_origin[o] = compute_by_origin.get(o, 0) + 1
+    transfers_by_origin: Dict[str, int] = {}
+    for step in plan.steps:
+        for t in step.transfers:
+            o = dag.origin(t.node)
+            transfers_by_origin[o] = transfers_by_origin.get(o, 0) + 1
+    return {
+        "supersteps": len(plan.steps),
+        "transfers": plan.n_transfers,
+        "origins": len(compute_by_origin),
+        "compute_by_origin": compute_by_origin,
+        "transfers_by_origin": transfers_by_origin,
+        "max_transfers_per_origin": max(transfers_by_origin.values(), default=0),
+    }

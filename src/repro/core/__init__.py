@@ -17,7 +17,7 @@ from repro.core.schedule import (
     validate,
 )
 from repro.core.list_scheduling import dsh, ish, list_schedule
-from repro.core.exact import SolverResult, branch_and_bound
+from repro.core.exact import SolverResult, branch_and_bound, tighten_schedule
 
 __all__ = [
     "DAG",
@@ -41,4 +41,5 @@ __all__ = [
     "list_schedule",
     "SolverResult",
     "branch_and_bound",
+    "tighten_schedule",
 ]

@@ -19,7 +19,16 @@ from typing import Dict, Mapping, Optional, Tuple
 
 from repro.core.graph import DAG
 
-__all__ = ["HardwareSpec", "TPU_V5E", "OpCost", "annotate", "roofline_time"]
+__all__ = [
+    "HardwareSpec",
+    "TPU_V5E",
+    "OpCost",
+    "annotate",
+    "roofline_time",
+    "conv2d_slice_cost",
+    "pool2d_slice_cost",
+    "attention_cost",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,3 +144,49 @@ def matmul_cost(m: int, k: int, n: int, dtype_bytes: int = 2) -> OpCost:
     flops = 2.0 * m * k * n
     bytes_accessed = dtype_bytes * (m * k + k * n + m * n)
     return OpCost(flops, bytes_accessed)
+
+
+# --------------------------------------------------------------------- #
+# per-slice op costs (operator-granularity DAGs)
+#
+# A slice task computes a rectangular tile of one layer's output; its FLOPs
+# scale *exactly* with the tile shape (so tiles partitioning a layer conserve
+# the layer's FLOPs), while its bytes account for what the tile actually
+# touches — the full (or halo) input region it reads, its own weight slice,
+# and its own output tile.  Input re-reads across tiles mean bytes, unlike
+# FLOPs, are super-additive; the roofline `t` inherits that.
+# --------------------------------------------------------------------- #
+def conv2d_slice_cost(
+    in_rows: int, in_cols: int, cin: int, kh: int, kw: int,
+    out_rows: int, out_cols: int, cout_tile: int, dtype_bytes: int = 4,
+) -> OpCost:
+    """Cost of one conv tile: ``out_rows x out_cols x cout_tile`` outputs
+    read from an ``in_rows x in_cols x cin`` input region (incl. halo)."""
+    flops = 2.0 * out_rows * out_cols * cout_tile * cin * kh * kw
+    bytes_accessed = dtype_bytes * (
+        in_rows * in_cols * cin
+        + kh * kw * cin * cout_tile
+        + out_rows * out_cols * cout_tile
+    )
+    return OpCost(flops, bytes_accessed)
+
+
+def pool2d_slice_cost(
+    in_rows: int, in_cols: int, c_tile: int, k: int,
+    out_rows: int, out_cols: int, dtype_bytes: int = 4,
+) -> OpCost:
+    flops = 1.0 * out_rows * out_cols * c_tile * k * k
+    bytes_accessed = dtype_bytes * (
+        in_rows * in_cols * c_tile + out_rows * out_cols * c_tile
+    )
+    return OpCost(flops, bytes_accessed)
+
+
+def attention_cost(
+    seq: int, head_dim: int, n_heads: int, dtype_bytes: int = 4
+) -> OpCost:
+    """Scaled-dot-product attention over ``n_heads`` heads (QK^T, softmax,
+    PV).  Linear in ``n_heads``, so head-block slices conserve FLOPs."""
+    per_head_flops = 2.0 * seq * seq * head_dim * 2 + 8.0 * seq * seq
+    per_head_bytes = dtype_bytes * (4.0 * seq * head_dim + 2.0 * seq * seq)
+    return OpCost(n_heads * per_head_flops, n_heads * per_head_bytes)

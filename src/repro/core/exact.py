@@ -31,10 +31,10 @@ import time
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from repro.core.graph import DAG
-from repro.core.list_scheduling import dsh
+from repro.core.list_scheduling import dsh, ish
 from repro.core.schedule import EPS, Instance, Schedule, remove_redundant_duplicates, validate
 
-__all__ = ["SolverResult", "branch_and_bound"]
+__all__ = ["SolverResult", "branch_and_bound", "tighten_schedule"]
 
 
 @dataclasses.dataclass
@@ -66,9 +66,21 @@ def branch_and_bound(
     timeout_s: float = 10.0,
     allow_duplication: bool = True,
     seed_with_dsh: bool = True,
+    incumbent: Optional[Schedule] = None,
     max_supplier_branches: int = 16,
     state_table_cap: int = 200_000,
 ) -> SolverResult:
+    """Anytime branch and bound; ``timeout_s`` is the wall-clock budget.
+
+    ``incumbent`` warm-starts the search from an externally computed schedule
+    (e.g. a fast-path ISH/DSH schedule on a large graph): its makespan
+    becomes the initial upper bound, so the solver spends the whole budget
+    *tightening* a known-good schedule instead of first re-deriving one.
+    When both ``incumbent`` and ``seed_with_dsh`` are given, the better of
+    the two seeds wins.  Like the DSH seed (paper §4.3), the incumbent is
+    not subject to the encoding's duplication bound — ``from_seed`` tracks
+    whether the returned schedule is still the seed.
+    """
     if encoding not in ("improved", "tang"):
         raise ValueError(f"unknown encoding {encoding!r}")
     t0 = time.monotonic()
@@ -109,11 +121,20 @@ def branch_and_bound(
     best_mk = float("inf")
     best_sched: Optional[Schedule] = None
     best_from_seed = False
+    if incumbent is not None:
+        validate(incumbent, dag)
+        if incumbent.n_workers > n_workers:
+            raise ValueError("incumbent uses more workers than the search")
+        best_sched = incumbent
+        best_mk = incumbent.makespan(dag)
+        best_from_seed = True
     if seed_with_dsh:
         s = dsh(dag, n_workers)
-        best_sched = s
-        best_mk = s.makespan(dag)
-        best_from_seed = True
+        mk = s.makespan(dag)
+        if mk < best_mk:
+            best_sched = s
+            best_mk = mk
+            best_from_seed = True
 
     st = _SearchState(n_workers, len(nodes))
     explored = 0
@@ -309,4 +330,39 @@ def branch_and_bound(
         elapsed_s=time.monotonic() - t0,
         encoding=encoding,
         from_seed=best_from_seed,
+    )
+
+
+def tighten_schedule(
+    dag: DAG,
+    n_workers: int,
+    schedule: Optional[Schedule] = None,
+    timeout_s: float = 5.0,
+    heuristic: str = "dsh",
+    seed_with_dsh: bool = False,
+    **kwargs,
+) -> SolverResult:
+    """Hybrid fast-path + exact-search driver (ROADMAP: exact-solver warm
+    starts).
+
+    Computes a fast-path heuristic schedule (``heuristic``: ``"ish"`` or
+    ``"dsh"``) when none is supplied, then hands it to
+    :func:`branch_and_bound` as the incumbent with a ``timeout_s`` wall-clock
+    budget.  The result is never worse than the heuristic schedule; on small
+    graphs the search typically closes the instance, on large graphs it
+    anytime-tightens within the budget.
+    """
+    if "incumbent" in kwargs:
+        raise ValueError("pass the incumbent via the `schedule` argument")
+    if schedule is None:
+        if heuristic not in ("ish", "dsh"):
+            raise ValueError(f"unknown heuristic {heuristic!r}")
+        schedule = (dsh if heuristic == "dsh" else ish)(dag, n_workers)
+    return branch_and_bound(
+        dag,
+        n_workers,
+        timeout_s=timeout_s,
+        incumbent=schedule,
+        seed_with_dsh=seed_with_dsh,
+        **kwargs,
     )

@@ -35,6 +35,10 @@ class DAG:
     edges:   tuple of ``(u, v)`` pairs, data flowing u -> v.
     t:       mapping node -> execution cost on one worker (WCET analogue).
     w:       mapping edge -> communication latency if endpoints differ.
+    meta:    optional per-node metadata.  Operator-granularity DAGs use it to
+             record each slice task's originating layer and tile coordinates
+             (keys ``origin``/``tile``/``op``); schedulers ignore it, but
+             plan summaries and benchmarks group nodes by origin through it.
 
     Adjacency queries (``parents``/``children``/``topological_order``/
     ``levels``/...) are memoized on first use: the DAG is immutable, so the
@@ -46,6 +50,7 @@ class DAG:
     edges: Tuple[Tuple[str, str], ...]
     t: Mapping[str, float]
     w: Mapping[Tuple[str, str], float]
+    meta: Mapping[str, Mapping[str, object]] = dataclasses.field(default_factory=dict)
 
     def _memo(self, key: str, fn: Callable[[], object]):
         cache = self.__dict__.get("_cache")
@@ -80,6 +85,9 @@ class DAG:
                 raise GraphError(f"missing weight w({e})")
             if self.w[e] < 0:
                 raise GraphError(f"negative weight w({e})")
+        for n in self.meta:
+            if n not in node_set:
+                raise GraphError(f"meta references unknown node {n}")
         # cycle check via topological order (raises on cycle)
         self.topological_order()
 
@@ -90,13 +98,14 @@ class DAG:
         t: Mapping[str, float],
         w: Optional[Mapping[Tuple[str, str], float]] = None,
         default_w: float = 0.0,
+        meta: Optional[Mapping[str, Mapping[str, object]]] = None,
     ) -> "DAG":
         nodes = tuple(nodes)
         edges = tuple(tuple(e) for e in edges)
         w = dict(w or {})
         for e in edges:
             w.setdefault(e, default_w)
-        return DAG(nodes=nodes, edges=edges, t=dict(t), w=w)
+        return DAG(nodes=nodes, edges=edges, t=dict(t), w=w, meta=dict(meta or {}))
 
     # ------------------------------------------------------------------ #
     # basic structure
@@ -193,7 +202,7 @@ class DAG:
         w = dict(self.w)
         for s in sinks:
             w[(s, sink_name)] = 0.0
-        return DAG(nodes=nodes, edges=new_edges, t=t, w=w)
+        return DAG(nodes=nodes, edges=new_edges, t=t, w=w, meta=dict(self.meta))
 
     def levels(self) -> Dict[str, float]:
         """Critical-path level of each node (paper §3.3, Kruatrachue).
@@ -265,6 +274,7 @@ class DAG:
             edges=edges,
             t={n: self.t[n] for n in nodes},
             w={e: self.w[e] for e in edges},
+            meta={n: m for n, m in self.meta.items() if n in keep_set},
         )
 
     def relabel(self, fn: Callable[[str], str]) -> "DAG":
@@ -273,7 +283,27 @@ class DAG:
             edges=tuple((fn(u), fn(v)) for (u, v) in self.edges),
             t={fn(n): c for n, c in self.t.items()},
             w={(fn(u), fn(v)): c for (u, v), c in self.w.items()},
+            meta={fn(n): m for n, m in self.meta.items()},
         )
+
+    # ------------------------------------------------------------------ #
+    # slice metadata
+    # ------------------------------------------------------------------ #
+    def origin(self, v: str) -> str:
+        """Originating layer of node ``v`` (``v`` itself when unsliced)."""
+        m = self.meta.get(v)
+        return str(m["origin"]) if m and "origin" in m else v
+
+    def by_origin(self) -> Dict[str, Tuple[str, ...]]:
+        """origin layer -> the slice/glue nodes lowered from it (cached)."""
+
+        def build() -> Dict[str, Tuple[str, ...]]:
+            m: Dict[str, List[str]] = {}
+            for n in self.nodes:
+                m.setdefault(self.origin(n), []).append(n)
+            return {k: tuple(v) for k, v in m.items()}
+
+        return self._memo("by_origin", build)
 
 
 def density(dag: DAG) -> float:
@@ -319,9 +349,12 @@ def random_dag(
             return float(rng.randint(int(lo), int(hi)))
         return rng.uniform(lo, hi)
 
+    # draw in sorted edge order: iterating the set directly made the weight
+    # assignment depend on PYTHONHASHSEED (different DAGs across processes)
+    edges = tuple(sorted(edges))
     t = {n: draw(*t_range) for n in names}
     w = {e: draw(*w_range) for e in edges}
-    dag = DAG(nodes=tuple(names), edges=tuple(sorted(edges)), t=t, w=w)
+    dag = DAG(nodes=tuple(names), edges=edges, t=t, w=w)
     if one_sink:
         dag = dag.one_sink()
     return dag

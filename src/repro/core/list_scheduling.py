@@ -48,6 +48,12 @@ class _State:
     by_node: Dict[str, List[Instance]]
     timeline: List[List[Instance]]  # per worker, kept sorted by start
     scheduled: set
+    # incremental availability indexes, maintained by place(): best finish of
+    # any instance of a node, and best finish per node per worker.  They turn
+    # every arrival query — the DSH binding-chain walk's inner loop across
+    # candidate workers — into O(1) lookups instead of scans over instances.
+    min_fin: Dict[str, float] = dataclasses.field(default_factory=dict)
+    local_fin: List[Dict[str, float]] = dataclasses.field(default_factory=list)
 
     @staticmethod
     def fresh(dag: DAG, n_workers: int) -> "_State":
@@ -58,6 +64,7 @@ class _State:
             by_node={},
             timeline=[[] for _ in range(n_workers)],
             scheduled=set(),
+            local_fin=[{} for _ in range(n_workers)],
         )
 
     # -- placement ----------------------------------------------------- #
@@ -66,18 +73,30 @@ class _State:
         self.by_node.setdefault(node, []).append(inst)
         insort(self.timeline[worker], inst, key=lambda i: i.start)
         fin = inst.finish(self.dag)
+        prev = self.min_fin.get(node)
+        if prev is None or fin < prev:
+            self.min_fin[node] = fin
+        lf = self.local_fin[worker]
+        prev = lf.get(node)
+        if prev is None or fin < prev:
+            lf[node] = fin
         if advance_free:
             self.free[worker] = max(self.free[worker], fin)
         return inst
 
     # -- queries -------------------------------------------------------- #
     def arrival(self, u: str, consumer: str, worker: int) -> float:
-        """Earliest time u's data (for edge u->consumer) is usable on worker."""
-        we = self.dag.w[(u, consumer)]
-        return min(
-            iu.finish(self.dag) + (0.0 if iu.worker == worker else we)
-            for iu in self.by_node[u]
-        )
+        """Earliest time u's data (for edge u->consumer) is usable on worker.
+
+        ``min(best local finish, best finish anywhere + w)`` — identical to
+        the min over instances (a local instance gains nothing from +w), but
+        O(1) via the incremental indexes.
+        """
+        best = self.min_fin[u] + self.dag.w[(u, consumer)]
+        lf = self.local_fin[worker].get(u)
+        if lf is not None and lf < best:
+            best = lf
+        return best
 
     def data_ready(self, node: str, worker: int) -> float:
         ps = self.dag.parents(node)
@@ -214,32 +233,59 @@ def _dsh_start(
     cursor = state.free[worker]
     tent: List[Tuple[str, float]] = []  # (node, start) tentatively on worker
     tent_nodes: Dict[str, float] = {}  # node -> tentative finish
+    pm = dag.parent_map()
+    cm = dag.child_map()
+    wmap = dag.w
+    min_fin = state.min_fin
+    local = state.local_fin[worker]
+    local_get = local.get
+    tent_get = tent_nodes.get
+    min_get = min_fin.get
+    INF = float("inf")
+    # x -> (ready time, binding parent).  A tentative duplicate of ``d``
+    # only *lowers* arrival_t(d, .), so a cached entry of a child of ``d``
+    # stays valid unless ``d`` was its binding (max-arrival) parent — the
+    # invalidation after each tent append pops exactly those entries.
+    info_cache: Dict[str, Tuple[float, Optional[str]]] = {}
 
-    def arrival_t(u: str, consumer: str) -> float:
-        cands = []
-        if u in tent_nodes:
-            cands.append(tent_nodes[u])
-        we = dag.w[(u, consumer)]
-        for iu in state.by_node.get(u, []):
-            cands.append(iu.finish(dag) + (0.0 if iu.worker == worker else we))
-        return min(cands)
+    def info(x: str) -> Tuple[float, Optional[str]]:
+        """(ready time of x on ``worker``, binding parent) — memoized.
 
-    def ready_t(x: str) -> float:
-        ps = dag.parents(x)
-        if not ps:
-            return 0.0
-        return max(arrival_t(u, x) for u in ps)
+        Per-parent arrival is the O(1) min over tentative copy, committed
+        local copy, and best remote + w (state.arrival semantics), inlined:
+        this loop is the DSH duplication search's innermost hot path.
+        """
+        r = info_cache.get(x)
+        if r is None:
+            best = -INF
+            bind: Optional[str] = None
+            for u in pm[x]:
+                a = INF
+                tf = tent_get(u)
+                if tf is not None:
+                    a = tf
+                lf = local_get(u)
+                if lf is not None and lf < a:
+                    a = lf
+                mf = min_get(u)
+                if mf is not None:
+                    mf += wmap[(u, x)]
+                    if mf < a:
+                        a = mf
+                if a > best:  # strict: ties keep the first parent, as max()
+                    best, bind = a, u
+            r = (best if bind is not None else 0.0, bind)
+            info_cache[x] = r
+        return r
 
     def on_worker(u: str) -> bool:
-        if u in tent_nodes:
-            return True
-        return any(iu.worker == worker for iu in state.by_node.get(u, []))
+        return u in tent_nodes or u in local
 
-    best_start = max(cursor, ready_t(node))
+    best_start = max(cursor, info(node)[0])
     best_prefix = 0  # number of tent entries realizing best_start
 
     for _ in range(len(dag.nodes)):
-        if ready_t(node) <= cursor + EPS:
+        if info(node)[0] <= cursor + EPS:
             break  # no communication-induced idle gap remains
         # walk up the binding-ancestor chain to a locally-recomputable node
         x = node
@@ -247,28 +293,33 @@ def _dsh_start(
         visited = set()
         while x not in visited:
             visited.add(x)
-            ps = dag.parents(x)
-            if not ps:
+            if not pm[x]:
                 break
-            u = max(ps, key=lambda u: arrival_t(u, x))
+            u = info(x)[1]  # binding parent: latest-arriving input
             if on_worker(u):
                 # binding input is already local: x itself is the deepest
                 # duplicable ancestor (it waits only on local finishes)
                 if x is not node:
                     dup_candidate = x
                 break
-            if ready_t(u) <= cursor + EPS:
+            if info(u)[0] <= cursor + EPS:
                 dup_candidate = u  # recomputable on `worker` immediately
                 break
             x = u  # u's own inputs are late; look further up the chain
         if dup_candidate is None:
             break
-        ds = max(cursor, ready_t(dup_candidate))
+        ds = max(cursor, info(dup_candidate)[0])
         df = ds + dag.t[dup_candidate]
         tent.append((dup_candidate, ds))
         tent_nodes[dup_candidate] = df
+        # the tent copy only lowers dup_candidate's arrival: a child's cached
+        # ready time survives unless dup_candidate was its binding parent
+        for c in cm[dup_candidate]:
+            r = info_cache.get(c)
+            if r is not None and r[1] == dup_candidate:
+                del info_cache[c]
         cursor = max(cursor, df)
-        new_start = max(cursor, ready_t(node))
+        new_start = max(cursor, info(node)[0])
         if new_start < best_start - EPS:
             best_start = new_start
             best_prefix = len(tent)
@@ -300,6 +351,11 @@ def _place_head(
     if duplicate:
         best = None
         for p in range(n_workers):
+            # a duplication search on p cannot start before p's free cursor,
+            # so workers already busier than the incumbent best start can be
+            # skipped without changing the argmin
+            if best is not None and state.free[p] > best[0][0]:
+                continue
             s, dups = _dsh_start(state, v, p)
             key = (s, len(dups), p)
             if best is None or key < best[0]:

@@ -198,23 +198,31 @@ def remove_redundant_duplicates(schedule: Schedule, dag: DAG) -> Schedule:
     an identical makespan contribution for every kept instance.
     """
     by_node = schedule.by_node()
+    # (instance, finish) lists per node: the supplier argmin below runs once
+    # per kept-instance parent edge, so hoist the finish computation out of it
+    with_fin: Dict[str, List[Tuple[Instance, float]]] = {
+        n: [(iu, iu.finish(dag)) for iu in insts] for n, insts in by_node.items()
+    }
 
     keep: set = set()
     stack: List[Instance] = []
     for s in dag.sinks():
-        best = min(by_node[s], key=lambda i: i.finish(dag))
+        best = min(with_fin[s], key=lambda p: p[1])[0]
         keep.add(best)
         stack.append(best)
 
+    parents = dag.parent_map()
     while stack:
         iv = stack.pop()
-        for u in dag.parents(iv.node):
+        ivw = iv.worker
+        for u in parents[iv.node]:
             we = dag.w[(u, iv.node)]
-
-            def arrival(iu: Instance) -> float:
-                return iu.finish(dag) + (0.0 if iu.worker == iv.worker else we)
-
-            supplier = min(by_node[u], key=arrival)
+            supplier = None
+            best_a = float("inf")
+            for (iu, f) in with_fin[u]:
+                a = f if iu.worker == ivw else f + we
+                if a < best_a:  # strict: ties keep the first instance, as min()
+                    best_a, supplier = a, iu
             if supplier not in keep:
                 keep.add(supplier)
                 stack.append(supplier)

@@ -7,6 +7,7 @@ from repro.models.transformer import (
     abstract_cache,
     decode_step,
 )
+from repro.models.slicing import SLICEABLE_OPS, slice_model, slicing_summary, tile_bounds
 
 __all__ = [
     "model_defs",
@@ -16,4 +17,8 @@ __all__ = [
     "init_cache",
     "abstract_cache",
     "decode_step",
+    "SLICEABLE_OPS",
+    "slice_model",
+    "slicing_summary",
+    "tile_bounds",
 ]

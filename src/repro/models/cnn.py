@@ -26,10 +26,13 @@ from repro.core.costmodel import (
     HardwareSpec,
     OpCost,
     TPU_V5E,
+    attention_cost,
     conv2d_cost,
+    conv2d_slice_cost,
     dense_cost,
     elementwise_cost,
     pool2d_cost,
+    pool2d_slice_cost,
 )
 from repro.core.graph import DAG
 
@@ -39,9 +42,35 @@ __all__ = [
     "lenet5",
     "lenet5_branchy",
     "inception_net",
+    "transformer_block",
     "apply_layer",
     "run_sequential",
 ]
+
+
+# --------------------------------------------------------------------------- #
+# SAME-padding tile windows (shared by slice-op semantics and slice costs)
+# --------------------------------------------------------------------------- #
+def _same_pads(size: int, k: int, s: int) -> Tuple[int, int, int]:
+    """XLA/TF ``SAME`` pads for one spatial dim: ``(pad_lo, pad_hi, out)``."""
+    out = -(-size // s)
+    total = max((out - 1) * s + k - size, 0)
+    lo = total // 2
+    return lo, total - lo, out
+
+
+def _row_window(r_lo: int, r_hi: int, size: int, k: int, s: int) -> Tuple[int, int, int, int]:
+    """Input-row window (with halo) computing output rows ``[r_lo, r_hi)``.
+
+    Returns ``(a, b, pad_lo, pad_hi)``: read input rows ``[a, b)`` and pad
+    them explicitly so a VALID window sweep reproduces exactly the SAME-padded
+    layer's output rows ``[r_lo, r_hi)``.
+    """
+    pt, _pb, _out = _same_pads(size, k, s)
+    lo = r_lo * s - pt
+    hi = (r_hi - 1) * s + k - pt
+    a, b = max(lo, 0), min(hi, size)
+    return a, b, a - lo, hi - b
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,7 +94,34 @@ class LayerSpec:
             return pool2d_cost(h, w, c, a.get("kernel", 2), stride=a.get("stride", 2))
         if self.op == "dense":
             return dense_cost(a["in_features"], a["features"])
-        if self.op in ("concat", "split", "input", "output"):
+        if self.op == "conv_slice":
+            h, w, cin = a["in_shape"]
+            k, s = a["kernel"], a.get("stride", 1)
+            ra, rb, _plo, _phi = _row_window(a["r_lo"], a["r_hi"], h, k, s)
+            _wl, _wr, out_cols = _same_pads(w, k, s)
+            return conv2d_slice_cost(
+                rb - ra, w, cin, k, k,
+                a["r_hi"] - a["r_lo"], out_cols, a["c_hi"] - a["c_lo"],
+            )
+        if self.op == "pool_slice":
+            h, w, _c = a["in_shape"]
+            k, s = a.get("kernel", 2), a.get("stride", 2)
+            ra, rb, _plo, _phi = _row_window(a["r_lo"], a["r_hi"], h, k, s)
+            _wl, _wr, out_cols = _same_pads(w, k, s)
+            return pool2d_slice_cost(
+                rb - ra, w, a["c_hi"] - a["c_lo"], k,
+                a["r_hi"] - a["r_lo"], out_cols,
+            )
+        if self.op == "dense_slice":
+            return dense_cost(a["in_features"], a["f_hi"] - a["f_lo"])
+        if self.op in ("attn", "attn_slice"):
+            n_heads = (
+                a["h_hi"] - a["h_lo"] if self.op == "attn_slice" else a["n_heads"]
+            )
+            return attention_cost(a["seq"], a["head_dim"], n_heads)
+        if self.op == "add":
+            return elementwise_cost(int(np.prod(self.out_shape)), flops_per_elem=1.0)
+        if self.op in ("concat", "split", "input", "output", "tile_concat"):
             n = int(np.prod(self.out_shape))
             return elementwise_cost(n, flops_per_elem=0.0)
         if self.op == "reshape":
@@ -81,11 +137,18 @@ class CNNModel:
     name: str
     layers: Tuple[LayerSpec, ...]  # topological order
 
+    def spec_map(self) -> Dict[str, LayerSpec]:
+        """name -> spec, built once (executors look specs up per node per
+        superstep; sliced models have hundreds of layers, so the linear scan
+        this replaces was O(L^2) across a plan)."""
+        cache = self.__dict__.get("_spec_map")
+        if cache is None:
+            cache = {l.name: l for l in self.layers}
+            object.__setattr__(self, "_spec_map", cache)
+        return cache
+
     def spec(self, name: str) -> LayerSpec:
-        for l in self.layers:
-            if l.name == name:
-                return l
-        raise KeyError(name)
+        return self.spec_map()[name]
 
     # -------------------------------------------------------------- #
     def init_params(self, key: jax.Array) -> Dict[str, Dict[str, jax.Array]]:
@@ -113,18 +176,30 @@ class CNNModel:
 
     # -------------------------------------------------------------- #
     def to_dag(self, hw: HardwareSpec = TPU_V5E, time_unit: float = 1e-9) -> DAG:
-        """Cost-annotated task DAG (t in ``time_unit`` seconds)."""
+        """Cost-annotated task DAG (t in ``time_unit`` seconds).
+
+        Edge weights use the *producer's* output bytes, so slice-task edges
+        are priced at actual tile bytes; node metadata records each task's
+        op, originating layer and tile coordinates (identity for unsliced
+        layers).
+        """
         t = {l.name: max(l.cost().time(hw) / time_unit, 1e-3) for l in self.layers}
         edges = []
         w = {}
+        meta = {}
         for l in self.layers:
+            m = {"op": l.op, "origin": l.attrs.get("origin", l.name)}
+            if "tile" in l.attrs:
+                m["tile"] = l.attrs["tile"]
+            meta[l.name] = m
             for p in self.inputs_of(l.name):
                 e = (p, l.name)
                 edges.append(e)
                 src = self.spec(p)
                 w[e] = hw.comm_time(src.out_bytes()) / time_unit
         return DAG.build(
-            nodes=tuple(l.name for l in self.layers), edges=tuple(edges), t=t, w=w
+            nodes=tuple(l.name for l in self.layers), edges=tuple(edges), t=t, w=w,
+            meta=meta,
         )
 
     def inputs_of(self, name: str) -> Tuple[str, ...]:
@@ -167,6 +242,66 @@ def apply_layer(
         (x,) = inputs
         y = x @ params[spec.name]["w"] + params[spec.name]["b"]
         return jax.nn.relu(y) if a.get("relu", True) else y
+    if spec.op == "conv_slice":
+        # one tile of a conv layer: output rows [r_lo, r_hi) x output
+        # channels [c_lo, c_hi), reading the halo'd input row window and the
+        # originating layer's weight slice (bit-exact vs. conv + slicing)
+        (x,) = inputs
+        h, w, _cin = a["in_shape"]
+        k, s = a["kernel"], a.get("stride", 1)
+        ra, rb, plo, phi = _row_window(a["r_lo"], a["r_hi"], h, k, s)
+        wl, wr, _ = _same_pads(w, k, s)
+        p = params[a["origin"]]
+        y = jax.lax.conv_general_dilated(
+            x[:, ra:rb], p["w"][..., a["c_lo"]:a["c_hi"]], (s, s),
+            [(plo, phi), (wl, wr)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + p["b"][a["c_lo"]:a["c_hi"]]
+        return jax.nn.relu(y)
+    if spec.op == "pool_slice":
+        (x,) = inputs
+        h, w, _c = a["in_shape"]
+        k, s = a.get("kernel", 2), a.get("stride", 2)
+        ra, rb, plo, phi = _row_window(a["r_lo"], a["r_hi"], h, k, s)
+        wl, wr, _ = _same_pads(w, k, s)
+        xs = x[:, ra:rb, :, a["c_lo"]:a["c_hi"]]
+        pads = ((0, 0), (plo, phi), (wl, wr), (0, 0))
+        if a["pool"] == "maxpool":
+            return jax.lax.reduce_window(
+                xs, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, s, s, 1), pads
+            )
+        y = jax.lax.reduce_window(
+            xs, 0.0, jax.lax.add, (1, k, k, 1), (1, s, s, 1), pads
+        )
+        return y / (k * k)
+    if spec.op == "dense_slice":
+        (x,) = inputs
+        p = params[a["origin"]]
+        y = x @ p["w"][:, a["f_lo"]:a["f_hi"]] + p["b"][a["f_lo"]:a["f_hi"]]
+        return jax.nn.relu(y) if a.get("relu", True) else y
+    if spec.op in ("attn", "attn_slice"):
+        q, k, v = inputs
+        hd, n_heads = a["head_dim"], a["n_heads"]
+        h_lo, h_hi = (
+            (a["h_lo"], a["h_hi"]) if spec.op == "attn_slice" else (0, n_heads)
+        )
+        b_, s_ = q.shape[0], q.shape[1]
+
+        def heads(t: jax.Array) -> jax.Array:
+            return t.reshape(b_, s_, n_heads, hd)[:, :, h_lo:h_hi, :]
+
+        scores = jnp.einsum("bqhd,bkhd->bhqk", heads(q), heads(k)) / np.sqrt(hd)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs, heads(v))
+        return o.reshape(b_, s_, (h_hi - h_lo) * hd)
+    if spec.op == "add":
+        x1, x2 = inputs
+        return x1 + x2
+    if spec.op == "tile_concat":
+        ax = a.get("axis", -1)
+        if ax >= 0:
+            ax += 1  # per-sample axis -> batched axis
+        return jnp.concatenate(list(inputs), axis=ax)
     if spec.op == "concat":
         return jnp.concatenate(list(inputs), axis=-1)
     if spec.op == "split":
@@ -304,3 +439,36 @@ def inception_net(input_hw: int = 224, n_classes: int = 10) -> CNNModel:
     ls.append(_dense("gemm", "reshape", c, n_classes, relu=False))
     ls.append(LayerSpec("output", "output", ("gemm",), (n_classes,)))
     return CNNModel("inception", tuple(ls))
+
+
+def transformer_block(
+    seq: int = 64, d_model: int = 128, n_heads: int = 8, d_ff: int = 256
+) -> CNNModel:
+    """One pre-LN-free transformer block as an explicit layer DAG.
+
+    QKV projections, multi-head attention, output projection and a 2-layer
+    FFN with residual adds — the layer-granularity view the slicer lowers to
+    head blocks (attention) and row blocks (dense).  Activations are
+    ``(seq, d)`` per sample, so the CNN scheduling/codegen pipeline applies
+    unchanged.
+    """
+    if d_model % n_heads:
+        raise ValueError("d_model must divide into heads")
+    hd = d_model // n_heads
+    dm = (seq, d_model)
+    proj = {"in_features": d_model, "features": d_model, "relu": False}
+    ls: List[LayerSpec] = [LayerSpec("input", "input", (), dm)]
+    ls.append(LayerSpec("wq", "dense", ("input",), dm, dict(proj)))
+    ls.append(LayerSpec("wk", "dense", ("input",), dm, dict(proj)))
+    ls.append(LayerSpec("wv", "dense", ("input",), dm, dict(proj)))
+    ls.append(LayerSpec("attn", "attn", ("wq", "wk", "wv"), dm,
+                        {"n_heads": n_heads, "head_dim": hd, "seq": seq}))
+    ls.append(LayerSpec("wo", "dense", ("attn",), dm, dict(proj)))
+    ls.append(LayerSpec("res1", "add", ("input", "wo"), dm))
+    ls.append(LayerSpec("ffn1", "dense", ("res1",), (seq, d_ff),
+                        {"in_features": d_model, "features": d_ff, "relu": True}))
+    ls.append(LayerSpec("ffn2", "dense", ("ffn1",), dm,
+                        {"in_features": d_ff, "features": d_model, "relu": False}))
+    ls.append(LayerSpec("res2", "add", ("res1", "ffn2"), dm))
+    ls.append(LayerSpec("output", "output", ("res2",), dm))
+    return CNNModel("transformer_block", tuple(ls))

@@ -1,0 +1,178 @@
+"""Operator-granularity lowering: tile layer-DAG models into slice-task DAGs.
+
+The paper schedules one task per network layer, capping parallelism at the
+width of the layer DAG (its branchy LeNet exists to manufacture width).  This
+module lowers a :class:`~repro.models.cnn.CNNModel` — CNNs and the
+transformer-block layer DAG alike — into an operator-granularity model whose
+tasks are rectangular *tiles* of each layer's output:
+
+* **conv**    -> output-channel tiles (default) or output-row tiles with
+                 exact halo windows (``spatial=True``);
+* **pool**    -> channel tiles (or row tiles under ``spatial=True``);
+* **dense**   -> output-feature row blocks;
+* **attn**    -> head blocks.
+
+Each sliced layer becomes ``n`` slice tasks plus one ``tile_concat`` glue
+node that *keeps the original layer's name*, so downstream consumers — and
+``run_sequential`` / the plan interpreter / the MPMD executor — are untouched
+and numerically identical to the unsliced model.  Slice tasks reference the
+originating layer's parameters (``attrs["origin"]``), so the original
+``init_params`` tree is shared.  Tile coordinates ride along in
+``attrs["tile"]`` and surface as DAG node metadata via ``CNNModel.to_dag``.
+
+FLOPs are conserved exactly (tiles partition the output); bytes — and hence
+roofline ``t`` — are super-additive because tiles re-read shared inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.models.cnn import CNNModel, LayerSpec, _same_pads
+
+__all__ = ["SLICEABLE_OPS", "slice_model", "slicing_summary", "tile_bounds"]
+
+SLICEABLE_OPS = ("conv", "maxpool", "avgpool", "dense", "attn")
+
+
+def tile_bounds(dim: int, n: int) -> List[Tuple[int, int]]:
+    """Split ``range(dim)`` into ``min(n, dim)`` contiguous non-empty tiles."""
+    n = max(1, min(n, dim))
+    out = []
+    for i in range(n):
+        lo, hi = i * dim // n, (i + 1) * dim // n
+        if hi > lo:
+            out.append((lo, hi))
+    return out
+
+
+def _slice_window_op(
+    l: LayerSpec, factor: int, spatial: bool, op: str, k: int, s: int,
+    extra: Dict[str, object], chan_tag: str,
+) -> Optional[List[LayerSpec]]:
+    """Shared conv/pool tiler: output-channel tiles, or halo-exact output-row
+    tiles under ``spatial``."""
+    out_h, out_w, out_c = l.out_shape
+    h = l.attrs["in_shape"][0]
+    if _same_pads(h, k, s)[2] != out_h:
+        return None  # builder shape inconsistent with SAME semantics; keep whole
+    base = dict(extra, in_shape=l.attrs["in_shape"], kernel=k, stride=s,
+                origin=l.name)
+    slices: List[LayerSpec] = []
+    if spatial:
+        for i, (lo, hi) in enumerate(tile_bounds(out_h, factor)):
+            attrs = dict(base, c_lo=0, c_hi=out_c, r_lo=lo, r_hi=hi,
+                         tile=("rows", lo, hi))
+            slices.append(LayerSpec(f"{l.name}@s{i}", op, l.inputs,
+                                    (hi - lo, out_w, out_c), attrs))
+    else:
+        for i, (lo, hi) in enumerate(tile_bounds(out_c, factor)):
+            attrs = dict(base, c_lo=lo, c_hi=hi, r_lo=0, r_hi=out_h,
+                         tile=(chan_tag, lo, hi))
+            slices.append(LayerSpec(f"{l.name}@s{i}", op, l.inputs,
+                                    (out_h, out_w, hi - lo), attrs))
+    return slices if len(slices) > 1 else None
+
+
+def _slice_conv(l: LayerSpec, factor: int, spatial: bool) -> Optional[List[LayerSpec]]:
+    return _slice_window_op(
+        l, factor, spatial, "conv_slice",
+        l.attrs["kernel"], l.attrs.get("stride", 1), {}, "cout",
+    )
+
+
+def _slice_pool(l: LayerSpec, factor: int, spatial: bool) -> Optional[List[LayerSpec]]:
+    return _slice_window_op(
+        l, factor, spatial, "pool_slice",
+        l.attrs.get("kernel", 2), l.attrs.get("stride", 2), {"pool": l.op}, "chan",
+    )
+
+
+def _slice_dense(l: LayerSpec, factor: int) -> Optional[List[LayerSpec]]:
+    a = dict(l.attrs)
+    f = a["features"]
+    slices: List[LayerSpec] = []
+    for i, (lo, hi) in enumerate(tile_bounds(f, factor)):
+        attrs = {
+            "in_features": a["in_features"], "relu": a.get("relu", True),
+            "origin": l.name, "f_lo": lo, "f_hi": hi, "tile": ("fout", lo, hi),
+        }
+        out_shape = (*l.out_shape[:-1], hi - lo)
+        slices.append(LayerSpec(f"{l.name}@s{i}", "dense_slice", l.inputs,
+                                out_shape, attrs))
+    return slices if len(slices) > 1 else None
+
+
+def _slice_attn(l: LayerSpec, factor: int) -> Optional[List[LayerSpec]]:
+    a = dict(l.attrs)
+    n, hd = a["n_heads"], a["head_dim"]
+    slices: List[LayerSpec] = []
+    for i, (lo, hi) in enumerate(tile_bounds(n, factor)):
+        attrs = {
+            "n_heads": n, "head_dim": hd, "seq": a["seq"], "origin": l.name,
+            "h_lo": lo, "h_hi": hi, "tile": ("heads", lo, hi),
+        }
+        out_shape = (*l.out_shape[:-1], (hi - lo) * hd)
+        slices.append(LayerSpec(f"{l.name}@s{i}", "attn_slice", l.inputs,
+                                out_shape, attrs))
+    return slices if len(slices) > 1 else None
+
+
+def slice_model(
+    model: CNNModel,
+    slice_factor: int = 4,
+    spatial: bool = False,
+    ops: Sequence[str] = SLICEABLE_OPS,
+) -> CNNModel:
+    """Lower ``model`` to operator granularity with ~``slice_factor`` tiles
+    per sliceable layer.
+
+    Returns a new :class:`CNNModel` (name suffixed ``@x<factor>``) executable
+    by every existing driver with the *original* model's parameter tree.
+    Layers whose tiled dimension is too small — or whose op is not in
+    ``ops`` — pass through untouched, so ``slice_factor=1`` is the identity.
+    """
+    if slice_factor < 1:
+        raise ValueError("slice_factor must be >= 1")
+    ops = set(ops)
+    out: List[LayerSpec] = []
+    for l in model.layers:
+        slices: Optional[List[LayerSpec]] = None
+        axis = -1
+        if l.op in ops:
+            if l.op == "conv":
+                slices = _slice_conv(l, slice_factor, spatial)
+                axis = 0 if spatial else -1
+            elif l.op in ("maxpool", "avgpool"):
+                slices = _slice_pool(l, slice_factor, spatial)
+                axis = 0 if spatial else -1
+            elif l.op == "dense":
+                slices = _slice_dense(l, slice_factor)
+            elif l.op == "attn":
+                slices = _slice_attn(l, slice_factor)
+        if not slices:
+            out.append(l)
+            continue
+        out.extend(slices)
+        # reassembly glue keeps the original layer name so downstream
+        # consumers (and run_sequential equivalence) are untouched
+        out.append(LayerSpec(
+            l.name, "tile_concat", tuple(s.name for s in slices), l.out_shape,
+            {"axis": axis, "origin": l.name, "tiles": len(slices)},
+        ))
+    return CNNModel(f"{model.name}@x{slice_factor}", tuple(out))
+
+
+def slicing_summary(model: CNNModel, sliced: CNNModel) -> Dict[str, object]:
+    """Small report for demos/benchmarks: task counts and tile stats."""
+    origins: Dict[str, int] = {}
+    for l in sliced.layers:
+        if l.op.endswith("_slice"):
+            origins[str(l.attrs["origin"])] = origins.get(str(l.attrs["origin"]), 0) + 1
+    return {
+        "layers": len(model.layers),
+        "tasks": len(sliced.layers),
+        "sliced_layers": len(origins),
+        "slice_tasks": sum(origins.values()),
+        "max_tiles": max(origins.values()) if origins else 0,
+    }

@@ -4,7 +4,8 @@ import itertools
 import pytest
 
 from repro.core import (
-    DAG, branch_and_bound, dsh, random_dag, single_worker_schedule, validate,
+    DAG, branch_and_bound, dsh, ish, random_dag, single_worker_schedule,
+    tighten_schedule, validate,
 )
 
 
@@ -99,6 +100,47 @@ class TestEncodingComparison:
             r = branch_and_bound(dag, 3, timeout_s=3)
             sink = dag.sinks()[0]
             assert len(r.schedule.instances_of(sink)) == 1
+
+    def test_warm_start_never_worse_than_incumbent(self):
+        """Fast-path schedules fed as the incumbent (ROADMAP warm starts):
+        the anytime result is at least as good, usually strictly better."""
+        improved = closed = 0
+        for seed in range(5):
+            dag = random_dag(12, 0.15, seed=seed)
+            h = ish(dag, 3)
+            r = tighten_schedule(dag, 3, h, timeout_s=10)
+            assert r.makespan <= h.makespan(dag) + 1e-9
+            validate(r.schedule, dag)
+            closed += r.optimal
+            if r.makespan < h.makespan(dag) - 1e-9:
+                improved += 1
+                assert not r.from_seed
+        # only gate on improvement when the searches actually closed, so a
+        # loaded CI machine hitting the wall-clock budget cannot flake this
+        if closed >= 3:
+            assert improved >= 1, "search should tighten some ISH schedules"
+
+    def test_warm_start_large_graph_respects_budget(self):
+        """On big graphs the incumbent makes a tiny budget useful: the
+        result is available immediately and never below fast-path quality."""
+        dag = random_dag(200, 0.1, seed=1)
+        h = dsh(dag, 8)
+        r = tighten_schedule(dag, 8, h, timeout_s=0.5)
+        assert r.makespan <= h.makespan(dag) + 1e-9
+        assert r.elapsed_s < 5.0
+        validate(r.schedule, dag)
+
+    def test_tighten_computes_heuristic_when_not_given(self):
+        dag = random_dag(15, 0.2, seed=3)
+        r = tighten_schedule(dag, 3, timeout_s=2, heuristic="ish")
+        assert r.schedule is not None
+        assert r.makespan <= ish(dag, 3).makespan(dag) + 1e-9
+
+    def test_incumbent_and_dsh_seed_compose(self):
+        dag = random_dag(10, 0.2, seed=4)
+        h = ish(dag, 3)
+        r = branch_and_bound(dag, 3, incumbent=h, seed_with_dsh=True, timeout_s=2)
+        assert r.makespan <= min(h.makespan(dag), dsh(dag, 3).makespan(dag)) + 1e-9
 
     def test_constraint9_duplication_bound(self):
         """Improved encoding: #instances(v) <= card(children(v)) for every

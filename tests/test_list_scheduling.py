@@ -81,6 +81,45 @@ class TestDuplication:
             assert s.makespan(dag) <= dag.sequential_makespan() + 1e-6
 
 
+class TestAvailabilityIndex:
+    def test_incremental_arrival_matches_instance_scan(self):
+        """The O(1) min_fin/local_fin indexes must agree with the direct min
+        over placed instances (the pre-memoization semantics)."""
+        from repro.core.list_scheduling import _State
+
+        dag = random_dag(30, 0.2, seed=7)
+        state = _State.fresh(dag, 3)
+        placed = []
+        t = 0.0
+        for i, n in enumerate(dag.topological_order()):
+            state.place(n, i % 3, t)
+            placed.append(n)
+            t += dag.t[n]
+            if i % 2:  # duplicate every other node on a second worker
+                state.place(n, (i + 1) % 3, t)
+                t += dag.t[n]
+            for (u, v) in dag.edges:
+                if u not in placed or v in placed:
+                    continue
+                for w in range(3):
+                    brute = min(
+                        iu.finish(dag) + (0.0 if iu.worker == w else dag.w[(u, v)])
+                        for iu in state.by_node[u]
+                    )
+                    assert state.arrival(u, v, w) == pytest.approx(brute)
+
+    def test_memoized_dsh_matches_reference_on_dense_graphs(self):
+        from repro.core.list_scheduling import list_schedule_reference
+
+        for seed in (0, 1, 2):
+            dag = random_dag(60, 0.3, seed=seed)
+            for m in (3, 8):
+                fast = list_schedule(dag, m, duplicate=True)
+                ref = list_schedule_reference(dag, m, duplicate=True)
+                assert fast.instances == ref.instances, (seed, m)
+                validate(fast, dag)
+
+
 class TestPaperObservations:
     def test_obs1_speedup_plateau(self):
         """Paper Obs. 1: speedup plateaus at the max-parallelism bound."""
