@@ -6,10 +6,15 @@ Times the fast-path pipeline across DAG sizes and worker counts:
 * ``plan``              — cursor-based :func:`repro.codegen.build_plan`
 * ``sliced``            — operator-granularity scheduling: lenet5/inception
                           lowered by :func:`repro.models.slicing.slice_model`
-                          vs their layer-granularity DAGs (makespan win
-                          asserted on 8 workers)
+                          with **direct slice-to-slice edges** vs both the
+                          layer-granularity DAGs and the PR 2 ``tile_concat``
+                          lowering (makespan strictly below the concat
+                          slicer, and — the halo-aware spatial rows —
+                          scheduled transfer bytes reduced >= 2x, asserted
+                          on 8 workers)
 * ``trace``             — shard_map MPMD executor trace (lowering) time on
-                          the ``schedule_cnn`` example models
+                          the ``schedule_cnn`` example models **and sliced
+                          plans** (``trace_ms`` per sliced plan)
 * reference equivalence — on sizes where the original O(V²·E) driver is
                           affordable, asserts the fast path produces
                           **identical** schedules (same instances, same
@@ -21,7 +26,9 @@ ISH on the 1000-node / density-0.10 / 8-worker random DAG exceeds the
 gate — if any scheduler row regresses more than 2x *and* more than 250 ms
 against the committed baseline (``--baseline``; the absolute slack keeps
 millisecond rows and cross-machine variance from flaking the gate while a
-complexity blowup on any row still trips it).
+complexity blowup on any row still trips it), or if any sliced row's total
+scheduled transfer bytes grow more than 1.5x over the committed baseline
+(bytes are deterministic, so the factor needs no absolute slack).
 
     PYTHONPATH=src python benchmarks/sched_scale.py [--quick] [--out PATH]
         [--baseline PATH]
@@ -41,11 +48,17 @@ from repro.core.list_scheduling import list_schedule, list_schedule_reference
 from repro.codegen import build_plan
 
 ISH_1000_8_BUDGET_S = 10.0  # acceptance bar for the fast path
-DSH_ISH_RATIO_BUDGET = 6.0  # gross-regression bar for the memoized DSH search
+DSH_ISH_RATIO_BUDGET = 3.0  # regression bar for the shared-cache DSH search
+                            # (measured ~2x at 2000 nodes / 8 workers)
 TREND_FACTOR = 2.0          # fail if a row gets >2x slower than baseline...
 TREND_SLACK_S = 0.25        # ...and slower by this much absolutely (so fast
                             # rows still catch complexity blowups without
                             # millisecond noise or cross-machine 2x flakes)
+BYTES_TREND_FACTOR = 1.5    # fail if a sliced row's scheduled transfer bytes
+                            # grow >1.5x vs baseline (deterministic, no slack)
+DIRECT_BYTES_REDUCTION = 2.0  # acceptance: halo-aware direct edges must at
+                              # least halve sliced-inception comm volume vs
+                              # the tile_concat slicer (spatial rows, 8 wrk)
 
 
 def bench_schedulers(sizes, workers, density, ref_max_nodes, results):
@@ -99,51 +112,85 @@ def bench_schedulers(sizes, workers, density, ref_max_nodes, results):
 
 
 def bench_sliced(workers, results, slice_factor=8):
-    """Operator-granularity vs layer-granularity scheduling (ISSUE 2)."""
+    """Operator-granularity scheduling: direct slice-to-slice edges vs both
+    the layer-granularity DAG and the PR 2 ``tile_concat`` lowering."""
     from repro.core import validate as validate_sched
     from repro.core.costmodel import KEYSTONE_CPU
     from repro.models.cnn import inception_net, lenet5
     from repro.models.slicing import slice_model
 
-    # always include 8 workers: the sliced-beats-layer acceptance gate below
-    # must run in the --quick CI smoke too (sliced DAGs are tiny, so this
-    # costs milliseconds)
+    # always include 8 workers: the acceptance gates below must run in the
+    # --quick CI smoke too (sliced DAGs are tiny, so this costs milliseconds)
     workers = sorted(set(workers) | {8})
     for model in (lenet5(28), inception_net(64)):
         dag = model.to_dag(KEYSTONE_CPU, time_unit=1e-6)
-        sliced = slice_model(model, slice_factor)
-        sdag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
-        for m in workers:
-            for name, dup in (("ish", False), ("dsh", True)):
-                layer_mk = list_schedule(dag, m, duplicate=dup).makespan(dag)
-                t0 = time.perf_counter()
-                sched = list_schedule(sdag, m, duplicate=dup)
-                dt = time.perf_counter() - t0
-                validate_sched(sched, sdag)
-                mk = sched.makespan(sdag)
-                results.append({
-                    "kind": "sliced_scheduler",
-                    "model": model.name,
-                    "algo": name,
-                    "slice_factor": slice_factor,
-                    "n_nodes": len(sdag.nodes),
-                    "n_workers": m,
-                    "schedule_s": round(dt, 4),
-                    "makespan": mk,
-                    "layer_makespan": layer_mk,
-                    "speedup_vs_layer": round(layer_mk / mk, 2),
-                })
-                print(
-                    f"{name:4s} sliced {model.name:9s} x{slice_factor} m={m}  "
-                    f"schedule {dt:7.3f}s  makespan {mk:9.1f} "
-                    f"(layer {layer_mk:9.1f}, {layer_mk / mk:.2f}x)"
-                )
-                if m >= 8:
-                    # acceptance: slicing must beat layer granularity where
-                    # the layer DAG is narrower than the worker pool
-                    assert mk < layer_mk, (
-                        f"sliced {model.name} m={m} {name}: {mk} !< {layer_mk}"
+        # layer-granularity reference makespans depend only on (m, algo)
+        layer_mks = {
+            (m, name): list_schedule(dag, m, duplicate=dup).makespan(dag)
+            for m in workers for name, dup in (("ish", False), ("dsh", True))
+        }
+        for spatial in (False, True):
+            direct = slice_model(model, slice_factor, spatial=spatial)
+            concat = slice_model(model, slice_factor, spatial=spatial,
+                                 direct=False)
+            sdag = direct.to_dag(KEYSTONE_CPU, time_unit=1e-6)
+            cdag = concat.to_dag(KEYSTONE_CPU, time_unit=1e-6)
+            d_bytes = {l.name: l.out_bytes() for l in direct.layers}
+            c_bytes = {l.name: l.out_bytes() for l in concat.layers}
+            for m in workers:
+                for name, dup in (("ish", False), ("dsh", True)):
+                    layer_mk = layer_mks[(m, name)]
+                    t0 = time.perf_counter()
+                    sched = list_schedule(sdag, m, duplicate=dup)
+                    dt = time.perf_counter() - t0
+                    validate_sched(sched, sdag)
+                    mk = sched.makespan(sdag)
+                    tb = build_plan(sched, sdag).comm_bytes(d_bytes)
+                    c_sched = list_schedule(cdag, m, duplicate=dup)
+                    c_mk = c_sched.makespan(cdag)
+                    c_tb = build_plan(c_sched, cdag).comm_bytes(c_bytes)
+                    results.append({
+                        "kind": "sliced_scheduler",
+                        "model": model.name,
+                        "algo": name,
+                        "slice_factor": slice_factor,
+                        "spatial": spatial,
+                        "n_nodes": len(sdag.nodes),
+                        "n_workers": m,
+                        "schedule_s": round(dt, 4),
+                        "makespan": mk,
+                        "layer_makespan": layer_mk,
+                        "speedup_vs_layer": round(layer_mk / mk, 2),
+                        "transfer_bytes": tb,
+                        "concat_makespan": c_mk,
+                        "concat_transfer_bytes": c_tb,
+                        "bytes_reduction_vs_concat": round(tb and c_tb / tb, 2),
+                    })
+                    print(
+                        f"{name:4s} sliced {model.name:9s} x{slice_factor}"
+                        f"{'r' if spatial else 'c'} m={m}  "
+                        f"schedule {dt:7.3f}s  makespan {mk:9.1f} "
+                        f"(layer {layer_mk:9.1f}, {layer_mk / mk:.2f}x; "
+                        f"concat {c_mk:9.1f})  bytes {tb / 1e6:6.2f}MB "
+                        f"(concat {c_tb / 1e6:6.2f}MB, {c_tb / max(tb, 1):.2f}x)"
                     )
+                    if m >= 8:
+                        # acceptance: slicing must beat layer granularity
+                        # where the layer DAG is narrower than the pool, and
+                        # direct edges must beat the tile_concat slicer
+                        assert mk < layer_mk, (
+                            f"sliced {model.name} m={m} {name}: {mk} !< {layer_mk}"
+                        )
+                        assert mk < c_mk, (
+                            f"direct {model.name} m={m} {name}: {mk} !< "
+                            f"concat {c_mk}"
+                        )
+                        if model.name == "inception" and spatial:
+                            # halo-aware rows: >= 2x less scheduled traffic
+                            assert tb * DIRECT_BYTES_REDUCTION <= c_tb, (
+                                f"direct bytes {tb} not {DIRECT_BYTES_REDUCTION}x "
+                                f"under concat {c_tb} ({name} m={m})"
+                            )
 
 
 def check_trend(results, baseline_path):
@@ -155,7 +202,7 @@ def check_trend(results, baseline_path):
                     r.get("density"))
         if r.get("kind") == "sliced_scheduler":
             return ("sliced", r["model"], r["algo"], r["slice_factor"],
-                    r["n_workers"])
+                    r.get("spatial", False), r["n_workers"])
         return None
 
     if not os.path.exists(baseline_path):
@@ -179,6 +226,17 @@ def check_trend(results, baseline_path):
                 failures.append(
                     f"{key(r)} {field}: {cv}s vs baseline {bv}s "
                     f"(> {TREND_FACTOR}x and > +{TREND_SLACK_S}s)"
+                )
+        # comm-volume gate: scheduled transfer bytes are deterministic, so
+        # any >1.5x growth on a sliced row is a real direct-edge regression
+        # (a zero-byte baseline row fails on any growth at all)
+        bv, cv = b.get("transfer_bytes"), r.get("transfer_bytes")
+        if bv is not None and cv is not None:
+            checked += 1
+            if cv > BYTES_TREND_FACTOR * bv:
+                failures.append(
+                    f"{key(r)} transfer_bytes: {cv} vs baseline {bv} "
+                    f"(> {BYTES_TREND_FACTOR}x)"
                 )
     if failures:
         raise AssertionError("perf trend regression:\n" + "\n".join(failures))
@@ -224,6 +282,53 @@ def bench_executor_trace(workers, results):
             print(
                 f"trace {model.name} m={m} fused={int(fused)}: {dt:6.3f}s "
                 f"({plan.n_transfers} transfers)"
+            )
+
+
+def bench_sliced_trace(workers, results, slice_factor=4):
+    """MPMD-executor trace time on *sliced* plans (``trace_ms`` column) —
+    the evidence base for the ROADMAP's lax.scan/segmented-executor item:
+    the unrolled superstep loop makes trace time grow with slice count."""
+    import jax
+    from repro.core import dsh
+    from repro.core.costmodel import KEYSTONE_CPU
+    from repro.codegen import build_mpmd_executor, coalesce_transfer_steps
+    from repro.models.cnn import inception_net, lenet5
+    from repro.models.slicing import slice_model
+
+    key = jax.random.PRNGKey(0)
+    n_dev = jax.device_count()
+    for model in (lenet5(28), inception_net(64)):
+        params = model.init_params(key)
+        x = jax.numpy.zeros((1, *model.layers[0].out_shape))
+        sliced = slice_model(model, slice_factor)
+        sdag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
+        for m in workers:
+            if m > n_dev:
+                continue
+            plan = build_plan(dsh(sdag, m), sdag)
+            # the executor coalesces transfer-only rounds before lowering;
+            # report the coalesced plan's shape so trace_ms and the
+            # superstep count describe the same traced program
+            traced = coalesce_transfer_steps(plan)
+            mesh = jax.make_mesh((m,), ("workers",))
+            f = build_mpmd_executor(plan, sliced, params, mesh, batch=1)
+            t0 = time.perf_counter()
+            f.lower(x)
+            trace_ms = (time.perf_counter() - t0) * 1e3
+            results.append({
+                "kind": "executor_trace",
+                "model": sliced.name,
+                "sliced": True,
+                "n_workers": m,
+                "trace_ms": round(trace_ms, 1),
+                "supersteps": len(traced.steps),
+                "transfers": traced.n_transfers,
+            })
+            print(
+                f"trace {sliced.name} m={m}: {trace_ms:7.1f}ms "
+                f"({len(traced.steps)} supersteps, {traced.n_transfers} "
+                f"transfers)"
             )
 
 
@@ -282,6 +387,7 @@ def main():
 
     if not args.no_trace:
         bench_executor_trace(trace_workers, results)
+        bench_sliced_trace(trace_workers, results)
 
     payload = {
         "benchmark": "sched_scale",

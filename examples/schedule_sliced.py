@@ -1,14 +1,17 @@
 """Operator-granularity scheduling demo: slice -> schedule -> execute.
 
 Lowers a layer-DAG model into per-tile slice tasks (conv/pool channel tiles,
-dense row blocks, attention head blocks), schedules the sliced DAG with the
-fast-path heuristics, optionally tightens the result with a warm-started
-branch-and-bound budget, and executes the sliced plan — verifying it is
-numerically identical to the unsliced sequential reference.
+dense row blocks, attention head blocks) with **direct slice-to-slice
+edges**, schedules the sliced DAG with the fast-path heuristics, optionally
+tightens the result with a warm-started branch-and-bound budget, and
+executes the sliced plan — verifying it is numerically identical to the
+unsliced sequential reference.  Prints the scheduled comm volume of the
+direct lowering next to the PR 2 ``tile_concat`` lowering so the
+halo-aware-edge win is visible.
 
     PYTHONPATH=src python examples/schedule_sliced.py \
         [--model inception|lenet5|transformer] [--workers 8] [--factor 8] \
-        [--spatial] [--tighten-s 0]
+        [--auto-factors] [--spatial] [--tighten-s 0]
 """
 import argparse
 
@@ -24,7 +27,7 @@ from repro.models.cnn import (
     run_sequential,
     transformer_block,
 )
-from repro.models.slicing import slice_model, slicing_summary
+from repro.models.slicing import choose_slice_factors, slice_model, slicing_summary
 
 
 def main():
@@ -33,6 +36,9 @@ def main():
                     default="inception")
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--factor", type=int, default=8)
+    ap.add_argument("--auto-factors", action="store_true",
+                    help="per-layer tile counts from the roofline cost model "
+                         "(choose_slice_factors) instead of one global factor")
     ap.add_argument("--spatial", action="store_true",
                     help="tile conv/pool along output rows instead of channels")
     ap.add_argument("--tighten-s", type=float, default=0.0,
@@ -44,7 +50,13 @@ def main():
         "lenet5": lambda: lenet5(28),
         "transformer": lambda: transformer_block(64, 128, 8, 256),
     }[args.model]()
-    sliced = slice_model(model, args.factor, spatial=args.spatial)
+    factors = args.factor
+    if args.auto_factors:
+        factors = choose_slice_factors(model, KEYSTONE_CPU,
+                                       max_factor=max(args.factor, 2),
+                                       spatial=args.spatial)
+        print(f"auto factors: {factors}")
+    sliced = slice_model(model, factors, spatial=args.spatial)
     print(f"== {model.name}: {slicing_summary(model, sliced)} ==")
 
     dag = model.to_dag(KEYSTONE_CPU, time_unit=1e-6)
@@ -54,10 +66,13 @@ def main():
           f"max parallelism {sdag.max_parallelism()}")
 
     best = None
+    ish_slice = None
     for name, fn in (("ISH", ish), ("DSH", dsh)):
         s_layer = fn(dag, args.workers)
         s_slice = fn(sdag, args.workers)
         validate(s_slice, sdag)
+        if name == "ISH":
+            ish_slice = s_slice
         mk_l, mk_s = s_layer.makespan(dag), s_slice.makespan(sdag)
         print(f"{name}-{args.workers}: layer makespan {mk_l:9.1f} us "
               f"(speedup {speedup(s_layer, dag):4.2f})  |  sliced "
@@ -65,6 +80,20 @@ def main():
               f"{mk_l / mk_s:4.2f}x vs layer)")
         if best is None or mk_s < best[1]:
             best = (s_slice, mk_s)
+
+    # comm volume before/after direct slice-to-slice edges, same schedule
+    # heuristic: the tile_concat lowering reassembles every sliced layer, so
+    # consumers ship whole layer outputs; direct edges ship tile windows
+    concat_sliced = slice_model(model, factors, spatial=args.spatial,
+                                direct=False)
+    cdag = concat_sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
+    c_plan = build_plan(ish(cdag, args.workers), cdag)
+    d_plan = build_plan(ish_slice, sdag)
+    c_b = c_plan.comm_bytes({l.name: l.out_bytes() for l in concat_sliced.layers})
+    d_b = d_plan.comm_bytes({l.name: l.out_bytes() for l in sliced.layers})
+    print(f"scheduled comm volume (ISH-{args.workers}): tile_concat "
+          f"{c_b / 1e6:.2f} MB -> direct edges {d_b / 1e6:.2f} MB "
+          f"({c_b / max(d_b, 1):.2f}x less traffic)")
 
     sched = best[0]
     if args.tighten_s > 0:

@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
 # Tier-1 gate: full test suite + scheduler-scaling smoke benchmark.
 # Perf regressions fail loudly: sched_scale asserts fast-path/reference
-# schedule equivalence, the ISH time budget, the sliced-vs-layer makespan
-# win on 8 workers, and the 2x trend gate against the committed
-# BENCH_sched.json (the DSH/ISH ratio bar needs the 2000-node matrix and
-# only runs in the full `make bench`).
+# schedule equivalence, the ISH time budget, the sliced-vs-layer and
+# direct-vs-tile_concat makespan wins on 8 workers, the >=2x comm-volume
+# reduction of halo-aware direct edges on sliced inception, and the trend
+# gates against the committed BENCH_sched.json — 2x on scheduler timings,
+# 1.5x on sliced rows' total scheduled transfer bytes (the DSH/ISH ratio
+# bar needs the 2000-node matrix and only runs in the full `make bench`).
 # The smoke run writes to a scratch path so the committed baseline is
 # only refreshed deliberately (make bench).
 set -euo pipefail

@@ -1,4 +1,11 @@
-from repro.codegen.plan import ExecutionPlan, Superstep, Transfer, build_plan, plan_summary
+from repro.codegen.plan import (
+    ExecutionPlan,
+    Superstep,
+    Transfer,
+    build_plan,
+    coalesce_transfer_steps,
+    plan_summary,
+)
 from repro.codegen.executor import interpret_plan, build_mpmd_executor, plan_liveness
 from repro.codegen.render import render_pseudo_c
 
@@ -7,6 +14,7 @@ __all__ = [
     "Superstep",
     "Transfer",
     "build_plan",
+    "coalesce_transfer_steps",
     "plan_summary",
     "interpret_plan",
     "build_mpmd_executor",

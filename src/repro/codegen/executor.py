@@ -31,10 +31,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.codegen.plan import ExecutionPlan, Superstep, Transfer
+from repro.codegen.plan import (
+    ExecutionPlan,
+    Superstep,
+    Transfer,
+    coalesce_transfer_steps,
+)
 from repro.models.cnn import CNNModel, apply_layer
 
 __all__ = ["interpret_plan", "build_mpmd_executor", "plan_liveness"]
+
+
+def _box_index(t: Transfer) -> Tuple[slice, ...]:
+    """Batched register index of a windowed transfer's payload."""
+    return (slice(None), *(slice(lo, hi) for (lo, hi) in t.box))
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
@@ -98,7 +108,13 @@ def plan_liveness(
                     for p in spec.inputs:
                         death[p] = max(death.get(p, i), i)
         for t in step.transfers:
-            death[t.node] = max(death.get(t.node, 0), i)
+            # a transfer both reads the register and materializes it on the
+            # destination: a node whose first appearance is as a transfer
+            # payload (e.g. a transfer-only first round in a hand-built
+            # plan) must be born at its producing superstep, not default to
+            # an unborn buffer with death at step 0
+            birth.setdefault(t.node, i)
+            death[t.node] = max(death.get(t.node, birth[t.node]), i)
     death[plan.sink] = n  # the output buffer survives the whole plan
     live_sets = [
         {b for b, bi in birth.items() if bi <= i <= death[b]} for i in range(n)
@@ -128,7 +144,17 @@ def interpret_plan(
                 ins = [x] if spec.op == "input" else [regs[w][p] for p in spec.inputs]
                 regs[w][name] = apply_layer(spec, params, ins)
         for t in step.transfers:
-            regs[t.dst][t.node] = regs[t.src][t.node]
+            src = regs[t.src][t.node]
+            if t.box is None:
+                regs[t.dst][t.node] = src
+            else:
+                # windowed transfer: copy only the consumed hull, leaving
+                # the rest of the destination register unmaterialized
+                # (zeros) — consumers read strictly inside the hull, and
+                # this oracle catches any box-inference bug numerically
+                idx = _box_index(t)
+                cur = regs[t.dst].get(t.node, jnp.zeros_like(src))
+                regs[t.dst][t.node] = cur.at[idx].set(src[idx])
     return regs[plan.sink_worker][plan.sink]
 
 
@@ -144,6 +170,7 @@ def build_mpmd_executor(
     batch: int = 1,
     liveness: bool = True,
     fuse_transfers: bool = True,
+    coalesce: bool = True,
 ) -> Callable[[jax.Array], jax.Array]:
     """Compile the plan into a jitted shard_map function ``f(x) -> y``.
 
@@ -157,8 +184,14 @@ def build_mpmd_executor(
     their death superstep.  ``fuse_transfers=False`` emits one ``ppermute``
     per communicated node per permutation round (the original layout);
     ``fuse_transfers=True`` ships one flattened payload per ``(src, dst)``
-    pair and one collective per permutation round.
+    pair and one collective per permutation round — windowed transfers
+    contribute only their consumed hull to the payload, so sliced plans'
+    fused payloads shrink to tile/halo intersections.  ``coalesce=True``
+    merges consecutive transfer-only supersteps into one comm round before
+    lowering (fewer unrolled supersteps to trace).
     """
+    if coalesce:
+        plan = coalesce_transfer_steps(plan)
     m = plan.n_workers
     if dict(zip(mesh.axis_names, mesh.devices.shape))[axis] != m:
         raise ValueError(f"mesh axis {axis!r} must have size {m}")
@@ -197,30 +230,54 @@ def build_mpmd_executor(
 
         return run
 
+    def t_size(t: Transfer) -> int:
+        """Flattened payload elements of one transfer (incl. batch dim)."""
+        if t.box is None:
+            return reg_sizes[t.node]
+        n = batch
+        for lo, hi in t.box:
+            n *= hi - lo
+        return n
+
     def fused_comm(regs: Dict[str, jax.Array], wid, transfers) -> None:
-        """One flattened ppermute per permutation round (mutates ``regs``)."""
-        pair_nodes: Dict[Tuple[int, int], List[str]] = {}
+        """One flattened ppermute per permutation round (mutates ``regs``).
+
+        Windowed transfers ship only their consumed hull — the payload per
+        ``(src, dst)`` pair is the concatenation of each transfer's window,
+        scattered back into the destination registers on arrival."""
+        pair_ts: Dict[Tuple[int, int], List[Transfer]] = {}
         for t in transfers:
-            pair_nodes.setdefault((t.src, t.dst), []).append(t.node)
-        for round_pairs in _permutation_rounds(sorted(pair_nodes)):
+            pair_ts.setdefault((t.src, t.dst), []).append(t)
+        for round_pairs in _permutation_rounds(sorted(pair_ts)):
             length = max(
-                sum(reg_sizes[n] for n in pair_nodes[p]) for p in round_pairs
+                sum(t_size(t) for t in pair_ts[p]) for p in round_pairs
             )
             payload = jnp.zeros((length,), jnp.float32)
             for (s, d) in round_pairs:
-                flat = jnp.concatenate(
-                    [regs[n].reshape(-1) for n in pair_nodes[(s, d)]]
-                )
+                flat = jnp.concatenate([
+                    (
+                        regs[t.node]
+                        if t.box is None
+                        else regs[t.node][_box_index(t)]
+                    ).reshape(-1)
+                    for t in pair_ts[(s, d)]
+                ])
                 if flat.size < length:
                     flat = jnp.pad(flat, (0, length - flat.size))
                 payload = jnp.where(wid == s, flat, payload)
             moved = jax.lax.ppermute(payload, axis, round_pairs)
             for (s, d) in round_pairs:
                 off = 0
-                for n in pair_nodes[(s, d)]:
-                    sz = reg_sizes[n]
-                    chunk = moved[off : off + sz].reshape(reg_shapes[n])
-                    regs[n] = jnp.where(wid == d, chunk, regs[n])
+                for t in pair_ts[(s, d)]:
+                    sz = t_size(t)
+                    chunk = moved[off : off + sz]
+                    if t.box is None:
+                        val = chunk.reshape(reg_shapes[t.node])
+                    else:
+                        idx = _box_index(t)
+                        win = (batch, *(hi - lo for (lo, hi) in t.box))
+                        val = regs[t.node].at[idx].set(chunk.reshape(win))
+                    regs[t.node] = jnp.where(wid == d, val, regs[t.node])
                     off += sz
 
     def per_node_comm(regs: Dict[str, jax.Array], wid, transfers) -> None:

@@ -17,10 +17,20 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.core.costmodel import box_bytes as _box_bytes
 from repro.core.graph import DAG
 from repro.core.schedule import Instance, Schedule
 
-__all__ = ["Transfer", "Superstep", "ExecutionPlan", "build_plan", "plan_summary"]
+__all__ = [
+    "Transfer",
+    "Superstep",
+    "ExecutionPlan",
+    "build_plan",
+    "coalesce_transfer_steps",
+    "plan_summary",
+]
+
+Box = Tuple[Tuple[int, int], ...]  # per-sample-axis (lo, hi) payload window
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,9 +38,19 @@ class Transfer:
     node: str      # value being communicated (producer layer name)
     src: int
     dst: int
+    # window of the producer register actually consumed on ``dst`` — the
+    # hull of every consumer-edge intersection there (``None`` = whole
+    # register).  The executor ships only this window (ACETONE's Writing/
+    # Reading channels carry exactly the bytes the reader needs, paper §5).
+    box: Optional[Box] = None
 
     def label(self) -> str:
         return f"{self.src}_{self.dst}_{self.node}"  # paper's src_dst_id norm
+
+    def box_bytes(self, dtype_bytes: int = 4) -> Optional[float]:
+        if self.box is None:
+            return None
+        return _box_bytes(self.box, dtype_bytes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,7 +72,14 @@ class ExecutionPlan:
         return sum(len(s.transfers) for s in self.steps)
 
     def comm_bytes(self, out_bytes: Dict[str, float]) -> float:
-        return sum(out_bytes[t.node] for s in self.steps for t in s.transfers)
+        """Total scheduled transfer payload: windowed transfers count their
+        box bytes, whole-register transfers the producer's output bytes."""
+        total = 0.0
+        for s in self.steps:
+            for t in s.transfers:
+                b = t.box_bytes()
+                total += out_bytes[t.node] if b is None else b
+        return total
 
 
 def build_plan(schedule: Schedule, dag: DAG, lookahead: bool = True) -> ExecutionPlan:
@@ -85,20 +112,54 @@ def build_plan(schedule: Schedule, dag: DAG, lookahead: bool = True) -> Executio
     subs: List[Tuple[Instance, ...]] = [schedule.sub_schedule(w) for w in range(m)]
     heads = [0] * m                        # cursor into each sub-schedule
     have: Set[Tuple[str, int]] = set()     # (node, worker) locally available
+    computed: Set[Tuple[str, int]] = set() # (node, worker) computed there
     pm = dag.parent_map()
+    cm = dag.child_map()
+    by_node = schedule.by_node()
     # supplier candidates per node, earliest-finish first (constraint 11)
     candidates: Dict[str, List[Instance]] = {
         n: sorted(insts, key=lambda iu: (iu.finish(dag), iu.worker))
-        for n, insts in schedule.by_node().items()
+        for n, insts in by_node.items()
     }
 
     def supplier(u: str) -> Optional[Instance]:
-        # only instances whose value already exists on their own worker can
-        # supply; pick the earliest-finishing one (constraint-11 semantics).
+        # only instances whose worker *computed* the value can supply (a
+        # worker that merely received it may hold just a window, and two
+        # hops of the same value in one fused comm round would read the
+        # relay's pre-round register); pick the earliest-finishing one
+        # (constraint-11 semantics).
         for iu in candidates[u]:
-            if (u, iu.worker) in have:
+            if (u, iu.worker) in computed:
                 return iu
         return None  # value not produced anywhere yet — wait a round
+
+    def edge_box(u: str, w: int):
+        """Hull of the windows every consumer of ``u`` scheduled on ``w``
+        reads (``None`` = some consumer needs the whole register).  Boxes
+        come from DAG node metadata (``in_boxes``, parent-edge aligned),
+        emitted by the operator-granularity slicer."""
+        hull: Optional[List[Tuple[int, int]]] = None
+        found = False
+        for c in cm[u]:
+            if not any(i.worker == w for i in by_node.get(c, ())):
+                continue
+            ib = dag.meta.get(c, {}).get("in_boxes")
+            if ib is None:
+                return None
+            box = ib[pm[c].index(u)]
+            if box is None:
+                return None
+            found = True
+            if hull is None:
+                hull = list(box)
+            else:
+                hull = [
+                    (min(a, lo), max(b, hi))
+                    for (a, b), (lo, hi) in zip(hull, box)
+                ]
+        if not found or hull is None:
+            return None
+        return tuple(hull)
 
     # want list: every (input, worker) pair some instance will need from
     # remote — i.e. the input is not computed earlier on that worker's own
@@ -143,6 +204,7 @@ def build_plan(schedule: Schedule, dag: DAG, lookahead: bool = True) -> Executio
                     if all((u, w) in have for u in pm[head.node]):
                         segs[w].append(head.node)
                         have.add((head.node, w))
+                        computed.add((head.node, w))
                         mark_produced(head.node)
                         heads[w] += 1
                         n_left -= 1
@@ -160,7 +222,9 @@ def build_plan(schedule: Schedule, dag: DAG, lookahead: bool = True) -> Executio
             key = (u, sup.worker, w)
             if key not in seen:
                 seen.add(key)
-                transfers.append(Transfer(node=u, src=sup.worker, dst=w))
+                transfers.append(
+                    Transfer(node=u, src=sup.worker, dst=w, box=edge_box(u, w))
+                )
             have.add((u, w))
 
         if lookahead:
@@ -194,6 +258,34 @@ def build_plan(schedule: Schedule, dag: DAG, lookahead: bool = True) -> Executio
         sink=sink,
         sink_worker=sink_inst.worker,
     )
+
+
+def coalesce_transfer_steps(plan: ExecutionPlan) -> ExecutionPlan:
+    """Merge transfer-only supersteps into the preceding comm round.
+
+    Sliced plans emit rounds where every worker is blocked on remote data
+    and no one computes; each such round costs the executor one more
+    unrolled superstep (and one more collective) for no compute.  Because
+    suppliers are always workers that *computed* the value (build_plan),
+    a transfer's source register never depends on an earlier transfer in
+    the same or the previous round, so consecutive transfer-only rounds —
+    with no compute separating them — collapse into the previous step's
+    round soundly.  A defensive relay check keeps the pass safe for
+    hand-built plans whose sources received their payload in the round
+    being merged into.
+    """
+    steps: List[Superstep] = []
+    for st in plan.steps:
+        if steps and not any(st.compute):
+            prev = steps[-1]
+            received = {(t.node, t.dst) for t in prev.transfers}
+            if all((t.node, t.src) not in received for t in st.transfers):
+                steps[-1] = Superstep(prev.compute, prev.transfers + st.transfers)
+                continue
+        steps.append(st)
+    if len(steps) == len(plan.steps):
+        return plan
+    return dataclasses.replace(plan, steps=tuple(steps))
 
 
 def plan_summary(plan: ExecutionPlan, dag: DAG) -> Dict[str, object]:

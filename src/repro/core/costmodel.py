@@ -24,11 +24,27 @@ __all__ = [
     "TPU_V5E",
     "OpCost",
     "annotate",
+    "box_bytes",
     "roofline_time",
     "conv2d_slice_cost",
     "pool2d_slice_cost",
     "attention_cost",
 ]
+
+
+def box_bytes(box, dtype_bytes: int = 4) -> float:
+    """Byte size of an axis-aligned window ``((lo, hi), ...)``.
+
+    The unit the direct-edge slicer prices communication in: a consumer
+    slice's input window intersected with one producer tile.  Used for both
+    DAG edge weights (:meth:`CNNModel.to_dag`) and transfer payload sizes
+    (:class:`repro.codegen.plan.Transfer`), so the scheduler's ``w`` and the
+    executor's shipped bytes agree by construction.
+    """
+    n = float(dtype_bytes)
+    for lo, hi in box:
+        n *= max(hi - lo, 0)
+    return n
 
 
 @dataclasses.dataclass(frozen=True)

@@ -134,6 +134,23 @@ class DAG:
 
         return self._memo("child_map", build)
 
+    def parent_weights(self) -> Dict[str, Tuple[Tuple[str, float], ...]]:
+        """node -> ((parent, w(parent, node)), ...) in parent order (cached).
+
+        Schedulers' inner loops pay per-edge tuple hashing when they look up
+        ``w[(u, v)]`` parent-by-parent; this flattens the weights next to the
+        parents once so hot paths iterate a prebuilt tuple instead.
+        """
+
+        def build() -> Dict[str, Tuple[Tuple[str, float], ...]]:
+            pm = self.parent_map()
+            return {
+                v: tuple((u, self.w[(u, v)]) for u in ps)
+                for v, ps in pm.items()
+            }
+
+        return self._memo("parent_weights", build)
+
     def indegrees(self) -> Dict[str, int]:
         """Number of parents per node (copy-safe: callers may mutate)."""
         pm = self.parent_map()

@@ -217,7 +217,8 @@ def dsh(dag: DAG, n_workers: int) -> Schedule:
 # DSH duplication search
 # ---------------------------------------------------------------------- #
 def _dsh_start(
-    state: _State, node: str, worker: int
+    state: _State, node: str, worker: int,
+    shared_remote: Optional[Dict[str, Tuple[Tuple[str, float], ...]]] = None,
 ) -> Tuple[float, List[Tuple[str, float]]]:
     """Best achievable start of ``node`` on ``worker`` with duplication.
 
@@ -228,6 +229,15 @@ def _dsh_start(
     re-evaluate.  The committed duplication list is the prefix realizing the
     best start time observed.  Returns ``(start, dups)`` where ``dups`` is a
     list of ``(node, start)`` copies to place on ``worker``.
+
+    ``shared_remote`` is the cross-worker binding-chain cache: per chain
+    node, the worker-*independent* part of each parent's arrival (best
+    finish anywhere + edge latency).  No placement happens between the
+    per-worker searches of one queue head, so ``min_fin`` is frozen and the
+    cache built walking the chain for one worker is reused verbatim by the
+    other ``m - 1`` — only the tentative/local minima are re-evaluated per
+    worker, which is what stops the ~100-parent-node searches recomputing
+    identical chains once per worker.
     """
     dag = state.dag
     cursor = state.free[worker]
@@ -235,13 +245,30 @@ def _dsh_start(
     tent_nodes: Dict[str, float] = {}  # node -> tentative finish
     pm = dag.parent_map()
     cm = dag.child_map()
-    wmap = dag.w
+    pw = dag.parent_weights()
     min_fin = state.min_fin
     local = state.local_fin[worker]
     local_get = local.get
     tent_get = tent_nodes.get
     min_get = min_fin.get
     INF = float("inf")
+    if shared_remote is None:
+        shared_remote = {}
+    remote_get = shared_remote.get
+
+    def remote(x: str) -> Tuple[Tuple[str, float], ...]:
+        """Per parent of ``x``: (parent, best finish anywhere + w) — the
+        worker-independent arrival component, cached across workers."""
+        r = remote_get(x)
+        if r is None:
+            entries = []
+            for u, wt in pw[x]:
+                mf = min_get(u)
+                entries.append((u, INF if mf is None else mf + wt))
+            r = tuple(entries)
+            shared_remote[x] = r
+        return r
+
     # x -> (ready time, binding parent).  A tentative duplicate of ``d``
     # only *lowers* arrival_t(d, .), so a cached entry of a child of ``d``
     # stays valid unless ``d`` was its binding (max-arrival) parent — the
@@ -252,28 +279,32 @@ def _dsh_start(
         """(ready time of x on ``worker``, binding parent) — memoized.
 
         Per-parent arrival is the O(1) min over tentative copy, committed
-        local copy, and best remote + w (state.arrival semantics), inlined:
-        this loop is the DSH duplication search's innermost hot path.
+        local copy, and the cached remote component: this loop is the DSH
+        duplication search's innermost hot path.  Searches that have not
+        duplicated anything yet (the common case) skip the tentative-copy
+        lookup entirely.
         """
         r = info_cache.get(x)
         if r is None:
             best = -INF
             bind: Optional[str] = None
-            for u in pm[x]:
-                a = INF
-                tf = tent_get(u)
-                if tf is not None:
-                    a = tf
-                lf = local_get(u)
-                if lf is not None and lf < a:
-                    a = lf
-                mf = min_get(u)
-                if mf is not None:
-                    mf += wmap[(u, x)]
-                    if mf < a:
-                        a = mf
-                if a > best:  # strict: ties keep the first parent, as max()
-                    best, bind = a, u
+            if tent_nodes:
+                for u, ra in remote(x):
+                    a = ra
+                    tf = tent_get(u)
+                    if tf is not None and tf < a:
+                        a = tf
+                    lf = local_get(u)
+                    if lf is not None and lf < a:
+                        a = lf
+                    if a > best:  # strict: ties keep the first parent, as max
+                        best, bind = a, u
+            else:
+                for u, ra in remote(x):
+                    lf = local_get(u)
+                    a = ra if lf is None or lf >= ra else lf
+                    if a > best:
+                        best, bind = a, u
             r = (best if bind is not None else 0.0, bind)
             info_cache[x] = r
         return r
@@ -350,13 +381,17 @@ def _place_head(
     """
     if duplicate:
         best = None
+        # cross-worker binding-chain cache: no placement happens inside this
+        # loop, so the remote arrival components computed walking v's
+        # ancestor chains are shared verbatim across all m searches
+        shared_remote: Dict[str, Tuple[Tuple[str, float], ...]] = {}
         for p in range(n_workers):
             # a duplication search on p cannot start before p's free cursor,
             # so workers already busier than the incumbent best start can be
             # skipped without changing the argmin
             if best is not None and state.free[p] > best[0][0]:
                 continue
-            s, dups = _dsh_start(state, v, p)
+            s, dups = _dsh_start(state, v, p, shared_remote)
             key = (s, len(dups), p)
             if best is None or key < best[0]:
                 best = (key, p, s, dups)

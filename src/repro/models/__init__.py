@@ -7,7 +7,14 @@ from repro.models.transformer import (
     abstract_cache,
     decode_step,
 )
-from repro.models.slicing import SLICEABLE_OPS, slice_model, slicing_summary, tile_bounds
+from repro.models.slicing import (
+    SLICEABLE_OPS,
+    Tiling,
+    choose_slice_factors,
+    slice_model,
+    slicing_summary,
+    tile_bounds,
+)
 
 __all__ = [
     "model_defs",
@@ -18,6 +25,8 @@ __all__ = [
     "abstract_cache",
     "decode_step",
     "SLICEABLE_OPS",
+    "Tiling",
+    "choose_slice_factors",
     "slice_model",
     "slicing_summary",
     "tile_bounds",

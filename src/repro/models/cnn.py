@@ -27,6 +27,7 @@ from repro.core.costmodel import (
     OpCost,
     TPU_V5E,
     attention_cost,
+    box_bytes,
     conv2d_cost,
     conv2d_slice_cost,
     dense_cost,
@@ -178,10 +179,13 @@ class CNNModel:
     def to_dag(self, hw: HardwareSpec = TPU_V5E, time_unit: float = 1e-9) -> DAG:
         """Cost-annotated task DAG (t in ``time_unit`` seconds).
 
-        Edge weights use the *producer's* output bytes, so slice-task edges
-        are priced at actual tile bytes; node metadata records each task's
-        op, originating layer and tile coordinates (identity for unsliced
-        layers).
+        Edge weights default to the *producer's* output bytes, so slice-task
+        edges are priced at actual tile bytes; direct slice-to-slice edges
+        carry ``attrs["in_boxes"]`` — the consumer-window ∩ producer-tile
+        intersection — and are priced at exactly those bytes.  Node metadata
+        records each task's op, originating layer, tile coordinates and
+        input boxes (``in_boxes``, parent-edge aligned), which
+        ``build_plan`` uses to ship windowed transfer payloads.
         """
         t = {l.name: max(l.cost().time(hw) / time_unit, 1e-3) for l in self.layers}
         edges = []
@@ -191,12 +195,16 @@ class CNNModel:
             m = {"op": l.op, "origin": l.attrs.get("origin", l.name)}
             if "tile" in l.attrs:
                 m["tile"] = l.attrs["tile"]
+            in_boxes = l.attrs.get("in_boxes")
+            if in_boxes is not None:
+                m["in_boxes"] = in_boxes
             meta[l.name] = m
-            for p in self.inputs_of(l.name):
+            for idx, p in enumerate(self.inputs_of(l.name)):
                 e = (p, l.name)
                 edges.append(e)
-                src = self.spec(p)
-                w[e] = hw.comm_time(src.out_bytes()) / time_unit
+                box = in_boxes[idx] if in_boxes is not None else None
+                b = box_bytes(box) if box is not None else self.spec(p).out_bytes()
+                w[e] = hw.comm_time(b) / time_unit
         return DAG.build(
             nodes=tuple(l.name for l in self.layers), edges=tuple(edges), t=t, w=w,
             meta=meta,
@@ -209,12 +217,57 @@ class CNNModel:
 # --------------------------------------------------------------------------- #
 # op semantics (batched NHWC)
 # --------------------------------------------------------------------------- #
+def _assemble_inputs(
+    layout, inputs: Sequence[jax.Array]
+) -> Tuple[List[jax.Array], List[Tuple[Optional[int], int]]]:
+    """Reassemble logical inputs from direct tile edges.
+
+    ``layout`` (``attrs["in_layout"]``, from the slicer) maps each logical
+    slot to either ``None`` — one input tensor, passed through — or
+    ``(axis, n_parts, base)``: the next ``n_parts`` inputs are producer
+    tiles, concatenated along per-sample ``axis`` into a block whose first
+    element sits at offset ``base`` of the producer's full extent.  Returns
+    the logical tensors plus per-slot ``(axis, base)`` so ops can shift
+    their static windows into block coordinates.
+    """
+    vals: List[jax.Array] = []
+    offs: List[Tuple[Optional[int], int]] = []
+    i = 0
+    for ent in layout:
+        if ent is None:
+            vals.append(inputs[i])
+            offs.append((None, 0))
+            i += 1
+            continue
+        axis, n, base = ent
+        parts = list(inputs[i:i + n])
+        i += n
+        bax = axis + 1 if axis >= 0 else axis  # per-sample -> batched axis
+        vals.append(parts[0] if n == 1 else jnp.concatenate(parts, axis=bax))
+        offs.append((axis, base))
+    return vals, offs
+
+
+def _slot_offsets(offs, slot: int) -> Tuple[int, int]:
+    """(row offset, last-axis offset) of logical input ``slot``."""
+    axis, base = offs[slot]
+    if axis == 0:
+        return base, 0
+    if axis == -1:
+        return 0, base
+    return 0, 0
+
+
 def apply_layer(
     spec: LayerSpec,
     params: Mapping[str, Mapping[str, jax.Array]],
     inputs: Sequence[jax.Array],
 ) -> jax.Array:
     a = dict(spec.attrs)
+    if "in_layout" in a:
+        inputs, offs = _assemble_inputs(a["in_layout"], inputs)
+    else:
+        offs = [(None, 0)] * len(inputs)
     if spec.op == "input":
         (x,) = inputs
         return x
@@ -245,26 +298,30 @@ def apply_layer(
     if spec.op == "conv_slice":
         # one tile of a conv layer: output rows [r_lo, r_hi) x output
         # channels [c_lo, c_hi), reading the halo'd input row window and the
-        # originating layer's weight slice (bit-exact vs. conv + slicing)
+        # originating layer's weight slice (bit-exact vs. conv + slicing).
+        # Under direct tile edges the input block may start at a row offset
+        # (subset of a row-tiled producer); the static window shifts with it.
         (x,) = inputs
+        r_off, _ = _slot_offsets(offs, 0)
         h, w, _cin = a["in_shape"]
         k, s = a["kernel"], a.get("stride", 1)
         ra, rb, plo, phi = _row_window(a["r_lo"], a["r_hi"], h, k, s)
         wl, wr, _ = _same_pads(w, k, s)
         p = params[a["origin"]]
         y = jax.lax.conv_general_dilated(
-            x[:, ra:rb], p["w"][..., a["c_lo"]:a["c_hi"]], (s, s),
+            x[:, ra - r_off:rb - r_off], p["w"][..., a["c_lo"]:a["c_hi"]], (s, s),
             [(plo, phi), (wl, wr)],
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
         ) + p["b"][a["c_lo"]:a["c_hi"]]
         return jax.nn.relu(y)
     if spec.op == "pool_slice":
         (x,) = inputs
+        r_off, c_off = _slot_offsets(offs, 0)
         h, w, _c = a["in_shape"]
         k, s = a.get("kernel", 2), a.get("stride", 2)
         ra, rb, plo, phi = _row_window(a["r_lo"], a["r_hi"], h, k, s)
         wl, wr, _ = _same_pads(w, k, s)
-        xs = x[:, ra:rb, :, a["c_lo"]:a["c_hi"]]
+        xs = x[:, ra - r_off:rb - r_off, :, a["c_lo"] - c_off:a["c_hi"] - c_off]
         pads = ((0, 0), (plo, phi), (wl, wr), (0, 0))
         if a["pool"] == "maxpool":
             return jax.lax.reduce_window(
@@ -287,12 +344,17 @@ def apply_layer(
         )
         b_, s_ = q.shape[0], q.shape[1]
 
-        def heads(t: jax.Array) -> jax.Array:
-            return t.reshape(b_, s_, n_heads, hd)[:, :, h_lo:h_hi, :]
+        def heads(t: jax.Array, slot: int) -> jax.Array:
+            # a head block is a contiguous feature column range; with direct
+            # tile edges the projection arrives as a sub-block starting at a
+            # feature offset, so window first, then fold into heads
+            _, f_off = _slot_offsets(offs, slot)
+            cols = t[..., h_lo * hd - f_off:h_hi * hd - f_off]
+            return cols.reshape(b_, s_, h_hi - h_lo, hd)
 
-        scores = jnp.einsum("bqhd,bkhd->bhqk", heads(q), heads(k)) / np.sqrt(hd)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", heads(q, 0), heads(k, 1)) / np.sqrt(hd)
         probs = jax.nn.softmax(scores, axis=-1)
-        o = jnp.einsum("bhqk,bkhd->bqhd", probs, heads(v))
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs, heads(v, 2))
         return o.reshape(b_, s_, (h_hi - h_lo) * hd)
     if spec.op == "add":
         x1, x2 = inputs

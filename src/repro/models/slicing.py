@@ -12,25 +12,59 @@ tasks are rectangular *tiles* of each layer's output:
 * **dense**   -> output-feature row blocks;
 * **attn**    -> head blocks.
 
-Each sliced layer becomes ``n`` slice tasks plus one ``tile_concat`` glue
-node that *keeps the original layer's name*, so downstream consumers — and
-``run_sequential`` / the plan interpreter / the MPMD executor — are untouched
-and numerically identical to the unsliced model.  Slice tasks reference the
-originating layer's parameters (``attrs["origin"]``), so the original
-``init_params`` tree is shared.  Tile coordinates ride along in
-``attrs["tile"]`` and surface as DAG node metadata via ``CNNModel.to_dag``.
+**Direct slice-to-slice dataflow** (``direct=True``, the default): a consumer
+slice whose input window intersects only some producer tiles reads *those
+tiles* — halo-aware edges carrying exactly the intersection bytes — instead
+of a reassembled full tensor.  The ``tile_concat`` glue node survives only as
+a boundary adapter where tilings genuinely misalign (flatten/reshape joins,
+residual adds, the final output); glue nodes with no remaining consumer are
+pruned, so aligned chains like conv -> pool -> conv carry **no** concat on
+the critical path and the scheduler sees per-edge ``w`` shrink from full
+layer outputs to tile intersections (ACETONE's Writing/Reading channels ship
+exactly the bytes a consumer core needs, paper §5).  Plain channel ``concat``
+layers (inception modules, branch joins) are *seen through*: their input
+tilings compose into one tiling of the concatenated output, so downstream
+slices read branch tiles directly and the module concat disappears too.
+``direct=False`` reproduces the PR 2 reassemble-everything lowering.
 
-FLOPs are conserved exactly (tiles partition the output); bytes — and hence
-roofline ``t`` — are super-additive because tiles re-read shared inputs.
+Consumers record the tile wiring in two attrs:
+
+* ``in_layout``  — per logical input slot, ``None`` (whole producer tensor,
+  untouched semantics) or ``(axis, n_parts, base)``: the next ``n_parts``
+  entries of ``inputs`` are tile tensors to concatenate along per-sample
+  ``axis``; the assembled block starts at element ``base`` of the producer's
+  full extent, so ops shift their static windows by ``base``.
+* ``in_bytes``   — per flattened input, the byte size of the intersection of
+  the consumer's input window with that tile (``None`` -> full producer
+  output).  :meth:`CNNModel.to_dag` prices edges from it.
+
+Each sliced layer still becomes ``n`` slice tasks (+ glue where needed);
+slice tasks reference the originating layer's parameters (``attrs
+["origin"]``), so the original ``init_params`` tree is shared, and execution
+through every driver (``run_sequential`` / plan interpreter / MPMD executor)
+stays bit-exact vs. the unsliced model.
+
+:func:`choose_slice_factors` replaces the single global ``slice_factor``
+knob: per-layer tile counts from the roofline cost model — keep slicing
+while even the smallest tile's compute time dominates the comm cost of
+shipping a tile, stop when they approach parity.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
-from repro.models.cnn import CNNModel, LayerSpec, _same_pads
+from repro.core.costmodel import TPU_V5E, HardwareSpec
+from repro.models.cnn import CNNModel, LayerSpec, _row_window, _same_pads
 
-__all__ = ["SLICEABLE_OPS", "slice_model", "slicing_summary", "tile_bounds"]
+__all__ = [
+    "SLICEABLE_OPS",
+    "Tiling",
+    "choose_slice_factors",
+    "slice_model",
+    "slicing_summary",
+    "tile_bounds",
+]
 
 SLICEABLE_OPS = ("conv", "maxpool", "avgpool", "dense", "attn")
 
@@ -44,6 +78,24 @@ def tile_bounds(dim: int, n: int) -> List[Tuple[int, int]]:
         if hi > lo:
             out.append((lo, hi))
     return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Tiling:
+    """How one producer's output is partitioned along a single axis.
+
+    ``axis`` is per-sample: ``0`` for output rows, ``-1`` for the last axis
+    (channels / features; attention head blocks are stored in feature
+    units).  ``names[i]`` produces elements ``[bounds[i][0], bounds[i][1])``
+    of the ``dim``-long extent; bounds are sorted, contiguous and partition
+    ``[0, dim)``.  An unsliced producer inside a seen-through ``concat``
+    appears as a single pseudo-tile (its own layer name).
+    """
+
+    axis: int
+    dim: int
+    names: Tuple[str, ...]
+    bounds: Tuple[Tuple[int, int], ...]
 
 
 def _slice_window_op(
@@ -118,61 +170,286 @@ def _slice_attn(l: LayerSpec, factor: int) -> Optional[List[LayerSpec]]:
     return slices if len(slices) > 1 else None
 
 
+def _lower_layer(
+    l: LayerSpec, factor: int, spatial: bool, ops: frozenset
+) -> Tuple[Optional[List[LayerSpec]], int]:
+    """Tile one layer: ``(slices, tiling_axis)`` or ``(None, _)`` to keep
+    it whole."""
+    if l.op not in ops or factor < 2:
+        return None, -1
+    if l.op == "conv":
+        return _slice_conv(l, factor, spatial), 0 if spatial else -1
+    if l.op in ("maxpool", "avgpool"):
+        return _slice_pool(l, factor, spatial), 0 if spatial else -1
+    if l.op == "dense":
+        return _slice_dense(l, factor), -1
+    if l.op == "attn":
+        return _slice_attn(l, factor), -1
+    return None, -1
+
+
+def _tiling_of(slices: List[LayerSpec], axis: int, dim: int) -> Tiling:
+    bounds = []
+    for s in slices:
+        tag, lo, hi = s.attrs["tile"]
+        if tag == "heads":  # store head blocks in feature units
+            hd = s.attrs["head_dim"]
+            lo, hi = lo * hd, hi * hd
+        bounds.append((lo, hi))
+    return Tiling(axis=axis, dim=dim,
+                  names=tuple(s.name for s in slices), bounds=tuple(bounds))
+
+
+# --------------------------------------------------------------------------- #
+# direct edge inference
+# --------------------------------------------------------------------------- #
+Box = Tuple[Tuple[int, int], ...]
+
+
+def _needed_box(l: LayerSpec, pshape: Tuple[int, ...]) -> Box:
+    """Per-axis input ranges slice task ``l`` reads of a producer shaped
+    ``pshape`` (per-sample).  Axes the op does not window are full."""
+    box = [(0, d) for d in pshape]
+    a = l.attrs
+    if l.op in ("conv_slice", "pool_slice") and len(pshape) == 3:
+        k = a["kernel"] if l.op == "conv_slice" else a.get("kernel", 2)
+        s = a.get("stride", 1) if l.op == "conv_slice" else a.get("stride", 2)
+        ra, rb, _, _ = _row_window(a["r_lo"], a["r_hi"], a["in_shape"][0], k, s)
+        box[0] = (ra, rb)
+        if l.op == "pool_slice":
+            box[-1] = (a["c_lo"], a["c_hi"])  # pools preserve channels
+    elif l.op == "attn_slice":
+        hd = a["head_dim"]
+        box[-1] = (a["h_lo"] * hd, a["h_hi"] * hd)  # head block = feature cols
+    return tuple(box)
+
+
+def _is_full(box: Box, shape: Tuple[int, ...]) -> bool:
+    return all(lo == 0 and hi == d for (lo, hi), d in zip(box, shape))
+
+
+def _tile_local(box: Box, axis: int, lo: int, hi: int) -> Box:
+    """``box`` ∩ tile ``[lo, hi)`` along ``axis``, in tile-local coords
+    (the tile spans the full extent of every other axis)."""
+    ai = axis if axis >= 0 else len(box) - 1
+    out = list(box)
+    a, b = out[ai]
+    out[ai] = (max(a, lo) - lo, min(b, hi) - lo)
+    return tuple(out)
+
+
+def _rewire_direct(
+    layers: List[LayerSpec],
+    tilings: Dict[str, Tiling],
+    spec_of: Dict[str, LayerSpec],
+) -> List[LayerSpec]:
+    """Replace glue-mediated slice inputs with direct tile edges.
+
+    Every slice task gains ``in_layout`` plus per-flattened-input ``in_boxes``
+    — the window of the (tile or whole-producer) register the consumer
+    actually reads, ``None`` when it reads all of it.  Boxes of untiled
+    producers (e.g. the network input feeding row slices) are recorded too,
+    so transfers of *unsliced* values also ship only the consumed window.
+    """
+    out: List[LayerSpec] = []
+    for l in layers:
+        if not l.op.endswith("_slice"):
+            out.append(l)
+            continue
+        new_inputs: List[str] = []
+        layout: List[Optional[Tuple[int, int, int]]] = []
+        in_boxes: List[Optional[Box]] = []
+        for pname in l.inputs:
+            pshape = spec_of[pname].out_shape
+            box = _needed_box(l, pshape)
+            tiling = tilings.get(pname)
+            if tiling is None:
+                new_inputs.append(pname)
+                layout.append(None)
+                in_boxes.append(None if _is_full(box, pshape) else box)
+                continue
+            ai = tiling.axis if tiling.axis >= 0 else len(box) - 1
+            q_lo, q_hi = box[ai]
+            picked = [
+                (name, lo, hi)
+                for name, (lo, hi) in zip(tiling.names, tiling.bounds)
+                if hi > q_lo and lo < q_hi
+            ]
+            layout.append((tiling.axis, len(picked), picked[0][1]))
+            for name, lo, hi in picked:
+                tb = _tile_local(box, tiling.axis, lo, hi)
+                tshape = list(pshape)
+                tshape[ai] = hi - lo  # part register: tile extent along axis
+                new_inputs.append(name)
+                in_boxes.append(None if _is_full(tb, tuple(tshape)) else tb)
+        attrs = dict(l.attrs)
+        attrs["in_layout"] = tuple(layout)
+        attrs["in_boxes"] = tuple(in_boxes)
+        out.append(LayerSpec(l.name, l.op, tuple(new_inputs), l.out_shape, attrs))
+    return out
+
+
+def _prune_dead(layers: List[LayerSpec]) -> List[LayerSpec]:
+    """Drop nodes no longer reachable from the final layer (dead glue and
+    seen-through concats)."""
+    if not layers:
+        return layers
+    spec_of = {l.name: l for l in layers}
+    keep = set()
+    stack = [layers[-1].name]
+    while stack:
+        n = stack.pop()
+        if n in keep:
+            continue
+        keep.add(n)
+        stack.extend(spec_of[n].inputs)
+    return [l for l in layers if l.name in keep]
+
+
 def slice_model(
     model: CNNModel,
-    slice_factor: int = 4,
+    slice_factor: Union[int, Mapping[str, int]] = 4,
     spatial: bool = False,
     ops: Sequence[str] = SLICEABLE_OPS,
+    direct: bool = True,
 ) -> CNNModel:
-    """Lower ``model`` to operator granularity with ~``slice_factor`` tiles
-    per sliceable layer.
+    """Lower ``model`` to operator granularity.
 
-    Returns a new :class:`CNNModel` (name suffixed ``@x<factor>``) executable
-    by every existing driver with the *original* model's parameter tree.
-    Layers whose tiled dimension is too small — or whose op is not in
-    ``ops`` — pass through untouched, so ``slice_factor=1`` is the identity.
+    ``slice_factor`` is either one global tile count per sliceable layer or
+    a per-layer mapping (see :func:`choose_slice_factors`); layers absent
+    from the mapping — or whose tiled dimension is too small, or whose op is
+    not in ``ops`` — pass through untouched, so ``slice_factor=1`` (or an
+    empty mapping) is the identity.
+
+    ``direct=True`` emits halo-aware slice-to-slice edges and prunes glue
+    off aligned paths (module docstring); ``direct=False`` reassembles every
+    sliced layer through a ``tile_concat`` node (the PR 2 lowering).
+
+    Returns a new :class:`CNNModel` executable by every existing driver with
+    the *original* model's parameter tree.
     """
-    if slice_factor < 1:
-        raise ValueError("slice_factor must be >= 1")
-    ops = set(ops)
+    per_layer = None
+    if not isinstance(slice_factor, int):
+        per_layer = dict(slice_factor)
+        suffix = "@auto"
+    else:
+        if slice_factor < 1:
+            raise ValueError("slice_factor must be >= 1")
+        suffix = f"@x{slice_factor}"
+    ops = frozenset(ops)
     out: List[LayerSpec] = []
+    tilings: Dict[str, Tiling] = {}
     for l in model.layers:
-        slices: Optional[List[LayerSpec]] = None
-        axis = -1
-        if l.op in ops:
-            if l.op == "conv":
-                slices = _slice_conv(l, slice_factor, spatial)
-                axis = 0 if spatial else -1
-            elif l.op in ("maxpool", "avgpool"):
-                slices = _slice_pool(l, slice_factor, spatial)
-                axis = 0 if spatial else -1
-            elif l.op == "dense":
-                slices = _slice_dense(l, slice_factor)
-            elif l.op == "attn":
-                slices = _slice_attn(l, slice_factor)
+        factor = per_layer.get(l.name, 1) if per_layer is not None else slice_factor
+        slices, axis = _lower_layer(l, factor, spatial, ops)
         if not slices:
+            if direct and l.op == "concat":
+                _compose_concat_tiling(l, tilings, model)
             out.append(l)
             continue
         out.extend(slices)
-        # reassembly glue keeps the original layer name so downstream
-        # consumers (and run_sequential equivalence) are untouched
+        tilings[l.name] = _tiling_of(slices, axis, l.out_shape[axis])
+        # reassembly glue keeps the original layer's name so misaligned
+        # consumers (reshape/add/output boundaries) — and run_sequential
+        # equivalence for them — are untouched
         out.append(LayerSpec(
             l.name, "tile_concat", tuple(s.name for s in slices), l.out_shape,
             {"axis": axis, "origin": l.name, "tiles": len(slices)},
         ))
-    return CNNModel(f"{model.name}@x{slice_factor}", tuple(out))
+    if direct:
+        spec_of = {l.name: l for l in model.layers}
+        out = _prune_dead(_rewire_direct(out, tilings, spec_of))
+    return CNNModel(f"{model.name}{suffix}", tuple(out))
+
+
+def _compose_concat_tiling(
+    l: LayerSpec, tilings: Dict[str, Tiling], model: CNNModel
+) -> None:
+    """See through a channel ``concat``: compose its inputs' tilings into a
+    tiling of the concatenated output (untiled inputs become single
+    pseudo-tiles), so consumers read branch tiles directly and the concat
+    node drops off the dataflow path."""
+    if any(
+        p in tilings and tilings[p].axis != -1 for p in l.inputs
+    ) or not any(p in tilings for p in l.inputs):
+        return
+    names: List[str] = []
+    bounds: List[Tuple[int, int]] = []
+    off = 0
+    for p in l.inputs:
+        t = tilings.get(p)
+        width = model.spec(p).out_shape[-1]
+        if t is None:
+            names.append(p)
+            bounds.append((off, off + width))
+        else:
+            names.extend(t.names)
+            bounds.extend((off + lo, off + hi) for (lo, hi) in t.bounds)
+        off += width
+    tilings[l.name] = Tiling(axis=-1, dim=off, names=tuple(names),
+                             bounds=tuple(bounds))
+
+
+# --------------------------------------------------------------------------- #
+# cost-model-driven slice factors
+# --------------------------------------------------------------------------- #
+def choose_slice_factors(
+    model: CNNModel,
+    hw: HardwareSpec = TPU_V5E,
+    max_factor: int = 16,
+    balance: float = 1.0,
+    spatial: bool = False,
+    ops: Sequence[str] = SLICEABLE_OPS,
+) -> Dict[str, int]:
+    """Per-layer tile counts from the roofline cost model.
+
+    For each sliceable layer, keep increasing the tile count while even the
+    *smallest* tile's compute time still dominates the comm cost of shipping
+    the *largest* tile (``t_tile >= balance * w_tile``): splitting such a
+    layer buys parallelism that outweighs the traffic it creates.  Stop at
+    parity — beyond it, a tile is cheaper to recompute locally than to ship,
+    so further slicing only inflates the schedule's comm load.  Layers worth
+    no split are omitted (``slice_model`` treats them as factor 1).
+    """
+    opset = frozenset(ops)
+    factors: Dict[str, int] = {}
+    for l in model.layers:
+        best = 1
+        for k in range(2, max_factor + 1):
+            slices, _axis = _lower_layer(l, k, spatial, opset)
+            if not slices:
+                break
+            t_tile = min(s.cost().time(hw) for s in slices)
+            w_tile = max(hw.comm_time(s.out_bytes()) for s in slices)
+            if t_tile >= balance * w_tile:
+                best = len(slices)
+            else:
+                break
+        if best > 1:
+            factors[l.name] = best
+    return factors
 
 
 def slicing_summary(model: CNNModel, sliced: CNNModel) -> Dict[str, object]:
     """Small report for demos/benchmarks: task counts and tile stats."""
     origins: Dict[str, int] = {}
+    glue = 0
+    direct_edges = 0
     for l in sliced.layers:
         if l.op.endswith("_slice"):
             origins[str(l.attrs["origin"])] = origins.get(str(l.attrs["origin"]), 0) + 1
+            if "in_layout" in l.attrs:
+                direct_edges += sum(
+                    ent[1] for ent in l.attrs["in_layout"] if ent is not None
+                )
+        elif l.op == "tile_concat":
+            glue += 1
     return {
         "layers": len(model.layers),
         "tasks": len(sliced.layers),
         "sliced_layers": len(origins),
         "slice_tasks": sum(origins.values()),
         "max_tiles": max(origins.values()) if origins else 0,
+        "glue_nodes": glue,
+        "direct_edges": direct_edges,
     }

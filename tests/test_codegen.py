@@ -4,7 +4,16 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.codegen import build_plan, interpret_plan, render_pseudo_c
+from repro.codegen import (
+    ExecutionPlan,
+    Superstep,
+    Transfer,
+    build_plan,
+    coalesce_transfer_steps,
+    interpret_plan,
+    plan_liveness,
+    render_pseudo_c,
+)
 from repro.core import dsh, ish, random_dag, validate
 from repro.core.costmodel import KEYSTONE_CPU
 from repro.models.cnn import inception_net, lenet5, lenet5_branchy, run_sequential
@@ -64,6 +73,91 @@ class TestInterpreter:
             assert plan.n_workers == 3
             computed = {n for st in plan.steps for seg in st.compute for n in seg}
             assert computed == set(dag.nodes)
+
+
+class TestLivenessAndCoalescing:
+    def test_transfer_only_first_round_births_payload(self):
+        """Regression: a node whose first plan appearance is as a transfer
+        payload must be born at its producing superstep — previously its
+        death defaulted against 0 with no birth at all, so the executor
+        never materialized the register."""
+        model = lenet5(28)
+        plan = ExecutionPlan(
+            n_workers=2,
+            steps=(
+                Superstep(compute=((), ()),
+                          transfers=(Transfer("input", 0, 1),)),
+                Superstep(compute=(("input",), ()), transfers=()),
+            ),
+            makespan=0.0, sink="input", sink_worker=0,
+        )
+        birth, death, live = plan_liveness(plan, model)
+        assert birth["input"] == 0
+        assert death["input"] == len(plan.steps)  # sink survives the plan
+        assert "input" in live[0]
+        assert all(death[b] >= birth[b] for b in birth)
+
+    def test_coalesce_merges_transfer_only_steps(self):
+        plan = ExecutionPlan(
+            n_workers=2,
+            steps=(
+                Superstep(compute=(("input",), ()),
+                          transfers=(Transfer("input", 0, 1),)),
+                Superstep(compute=((), ()),
+                          transfers=(Transfer("conv1", 0, 1),)),
+                Superstep(compute=((), ()),
+                          transfers=(Transfer("pool1", 0, 1),)),
+                Superstep(compute=((), ("conv2",)), transfers=()),
+            ),
+            makespan=0.0, sink="conv2", sink_worker=1,
+        )
+        co = coalesce_transfer_steps(plan)
+        assert len(co.steps) == 2
+        assert len(co.steps[0].transfers) == 3
+        assert co.n_transfers == plan.n_transfers
+        # idempotent and identity on plans with nothing to merge
+        assert coalesce_transfer_steps(co) is co
+
+    def test_coalesce_keeps_unsafe_relays_separate(self):
+        """A transfer whose source only *received* the value in the previous
+        round must not fold into that round (the fused payload would read
+        the relay's pre-round register)."""
+        plan = ExecutionPlan(
+            n_workers=3,
+            steps=(
+                Superstep(compute=(("input",), (), ()),
+                          transfers=(Transfer("input", 0, 1),)),
+                Superstep(compute=((), (), ()),
+                          transfers=(Transfer("input", 1, 2),)),
+            ),
+            makespan=0.0, sink="input", sink_worker=0,
+        )
+        assert len(coalesce_transfer_steps(plan).steps) == 2
+
+    def test_plan_suppliers_are_computers(self):
+        """build_plan only ships from workers that computed the value —
+        a receive-then-forward chain would break windowed payloads and
+        coalesced fused rounds."""
+        for seed in range(6):
+            dag = random_dag(40, 0.2, seed=seed)
+            plan = build_plan(dsh(dag, 4), dag)
+            computed = set()
+            for step in plan.steps:
+                for w, seg in enumerate(step.compute):
+                    computed.update((n, w) for n in seg)
+                for t in step.transfers:
+                    assert (t.node, t.src) in computed
+
+    def test_coalesced_plan_interprets_identically(self):
+        model = inception_net(64)
+        params = model.init_params(KEY)
+        x = jax.random.normal(KEY, (2, 64, 64, 3))
+        dag = model.to_dag(KEYSTONE_CPU, time_unit=1e-6)
+        for lookahead in (True, False):
+            plan = build_plan(dsh(dag, 4), dag, lookahead=lookahead)
+            ref = interpret_plan(plan, model, params, x)
+            y = interpret_plan(coalesce_transfer_steps(plan), model, params, x)
+            assert float(jnp.abs(y - ref).max()) == 0.0
 
 
 class TestRender:
