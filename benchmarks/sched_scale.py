@@ -6,12 +6,19 @@ Times the fast-path pipeline across DAG sizes and worker counts:
 * ``plan``              — cursor-based :func:`repro.codegen.build_plan`
 * ``sliced``            — operator-granularity scheduling: lenet5/inception
                           lowered by :func:`repro.models.slicing.slice_model`
-                          with **direct slice-to-slice edges** vs both the
-                          layer-granularity DAGs and the PR 2 ``tile_concat``
+                          (uniform per-layer factor mappings) with **direct
+                          slice-to-slice edges** vs both the
+                          layer-granularity DAGs and the ``tile_concat``
                           lowering (makespan strictly below the concat
                           slicer, and — the halo-aware spatial rows —
                           scheduled transfer bytes reduced >= 2x, asserted
                           on 8 workers)
+* ``grid``              — 2-D (cout × rows) tiling: the schedule-aware
+                          :func:`repro.models.slicing.search_slice_factors`
+                          grid mapping on TPU-priced paper-size inception
+                          (224) must schedule at most 0.9x the best uniform
+                          single-axis tiling on 8 workers (the nested
+                          tiling IR acceptance gate)
 * ``trace``             — shard_map MPMD executor trace (lowering) time on
                           the ``schedule_cnn`` example models **and sliced
                           plans** (``trace_ms`` per sliced plan)
@@ -59,6 +66,10 @@ BYTES_TREND_FACTOR = 1.5    # fail if a sliced row's scheduled transfer bytes
 DIRECT_BYTES_REDUCTION = 2.0  # acceptance: halo-aware direct edges must at
                               # least halve sliced-inception comm volume vs
                               # the tile_concat slicer (spatial rows, 8 wrk)
+GRID_VS_1D_BUDGET = 0.9     # acceptance: the searched 2-D grid tiling must
+                            # schedule >= 10% below the best uniform 1-D
+                            # tiling on TPU-priced inception(224), 8 workers
+                            # (deterministic scheduling -> no slack needed)
 
 
 def bench_schedulers(sizes, workers, density, ref_max_nodes, results):
@@ -113,11 +124,11 @@ def bench_schedulers(sizes, workers, density, ref_max_nodes, results):
 
 def bench_sliced(workers, results, slice_factor=8):
     """Operator-granularity scheduling: direct slice-to-slice edges vs both
-    the layer-granularity DAG and the PR 2 ``tile_concat`` lowering."""
+    the layer-granularity DAG and the ``tile_concat`` lowering."""
     from repro.core import validate as validate_sched
     from repro.core.costmodel import KEYSTONE_CPU
     from repro.models.cnn import inception_net, lenet5
-    from repro.models.slicing import slice_model
+    from repro.models.slicing import slice_model, uniform_factors
 
     # always include 8 workers: the acceptance gates below must run in the
     # --quick CI smoke too (sliced DAGs are tiny, so this costs milliseconds)
@@ -130,9 +141,9 @@ def bench_sliced(workers, results, slice_factor=8):
             for m in workers for name, dup in (("ish", False), ("dsh", True))
         }
         for spatial in (False, True):
-            direct = slice_model(model, slice_factor, spatial=spatial)
-            concat = slice_model(model, slice_factor, spatial=spatial,
-                                 direct=False)
+            factors = uniform_factors(model, slice_factor, spatial=spatial)
+            direct = slice_model(model, factors)
+            concat = slice_model(model, factors, direct=False)
             sdag = direct.to_dag(KEYSTONE_CPU, time_unit=1e-6)
             cdag = concat.to_dag(KEYSTONE_CPU, time_unit=1e-6)
             d_bytes = {l.name: l.out_bytes() for l in direct.layers}
@@ -193,6 +204,84 @@ def bench_sliced(workers, results, slice_factor=8):
                             )
 
 
+def bench_grid(results):
+    """2-D (cout × rows) grid acceptance: the schedule-aware grid search on
+    TPU-priced paper-size inception (224) must schedule at most
+    ``GRID_VS_1D_BUDGET`` (0.9x) of the best uniform single-axis tiling on
+    8 workers.  Scheduling is deterministic, so the gate needs no slack."""
+    from repro.core.costmodel import TPU_V5E
+    from repro.models.cnn import inception_net
+    from repro.models.slicing import (
+        search_slice_factors,
+        slice_model,
+        uniform_factors,
+    )
+
+    m = 8
+    model = inception_net(224)
+
+    def best_over_heuristics(factors):
+        sliced = slice_model(model, factors)
+        sdag = sliced.to_dag(TPU_V5E, time_unit=1e-9)
+        best = None
+        for name, dup in (("ish", False), ("dsh", True)):
+            sched = list_schedule(sdag, m, duplicate=dup)
+            validate(sched, sdag)
+            mk = sched.makespan(sdag)
+            if best is None or mk < best[0]:
+                tb = build_plan(sched, sdag).comm_bytes(
+                    {l.name: l.out_bytes() for l in sliced.layers}
+                )
+                best = (mk, name, tb, len(sdag.nodes))
+        return best
+
+    best_1d = None
+    for n in (4, 8):
+        for spatial in (False, True):
+            mk, algo, tb, nn = best_over_heuristics(
+                uniform_factors(model, n, spatial=spatial)
+            )
+            tag = f"{'rows' if spatial else 'chan'}{n}"
+            print(f"grid-bench 1-D {tag:7s} m={m}: makespan {mk:10.1f} "
+                  f"({algo})  bytes {tb / 1e6:6.2f}MB")
+            if best_1d is None or mk < best_1d[0]:
+                best_1d = (mk, tag)
+
+    t0 = time.perf_counter()
+    factors = search_slice_factors(model, TPU_V5E, m=m)
+    search_s = time.perf_counter() - t0
+    n_grids = sum(
+        1 for v in factors.values()
+        if isinstance(v, tuple) and v[0] > 1 and v[1] > 1
+    )
+    mk, algo, tb, nn = best_over_heuristics(factors)
+    ratio = mk / best_1d[0]
+    results.append({
+        "kind": "grid_scheduler",
+        "model": model.name,
+        "input_hw": 224,
+        "hw": "tpu-v5e",
+        "n_workers": m,
+        "n_nodes": nn,
+        "search_s": round(search_s, 2),
+        "makespan": mk,
+        "algo": algo,
+        "transfer_bytes": tb,
+        "best_1d_makespan": best_1d[0],
+        "best_1d": best_1d[1],
+        "grid_layers": n_grids,
+        "ratio_vs_best_1d": round(ratio, 4),
+    })
+    print(f"grid-bench 2-D search m={m}: makespan {mk:10.1f} ({algo}, "
+          f"{n_grids} grid layers, search {search_s:.1f}s)  "
+          f"ratio vs best 1-D ({best_1d[1]}) = {ratio:.3f}")
+    assert n_grids >= 2, f"search found only {n_grids} 2-D grid layers"
+    assert ratio <= GRID_VS_1D_BUDGET, (
+        f"2-D grid makespan {mk} not {GRID_VS_1D_BUDGET}x under best 1-D "
+        f"{best_1d[0]} ({best_1d[1]}): ratio {ratio:.3f}"
+    )
+
+
 def check_trend(results, baseline_path):
     """Fail on >TREND_FACTOR slowdowns vs the committed baseline rows."""
 
@@ -203,6 +292,8 @@ def check_trend(results, baseline_path):
         if r.get("kind") == "sliced_scheduler":
             return ("sliced", r["model"], r["algo"], r["slice_factor"],
                     r.get("spatial", False), r["n_workers"])
+        if r.get("kind") == "grid_scheduler":
+            return ("grid", r["model"], r["input_hw"], r["n_workers"])
         return None
 
     if not os.path.exists(baseline_path):
@@ -294,14 +385,14 @@ def bench_sliced_trace(workers, results, slice_factor=4):
     from repro.core.costmodel import KEYSTONE_CPU
     from repro.codegen import build_mpmd_executor, coalesce_transfer_steps
     from repro.models.cnn import inception_net, lenet5
-    from repro.models.slicing import slice_model
+    from repro.models.slicing import slice_model, uniform_factors
 
     key = jax.random.PRNGKey(0)
     n_dev = jax.device_count()
     for model in (lenet5(28), inception_net(64)):
         params = model.init_params(key)
         x = jax.numpy.zeros((1, *model.layers[0].out_shape))
-        sliced = slice_model(model, slice_factor)
+        sliced = slice_model(model, uniform_factors(model, slice_factor))
         sdag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
         for m in workers:
             if m > n_dev:
@@ -358,6 +449,7 @@ def main():
         sizes, workers, args.density, ref_max, results
     )
     bench_sliced(workers, results)
+    bench_grid(results)
 
     # acceptance: ISH @ 1000 nodes / 8 workers under budget
     ish_1000_8 = [

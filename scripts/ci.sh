@@ -3,12 +3,14 @@
 # Perf regressions fail loudly: sched_scale asserts fast-path/reference
 # schedule equivalence, the ISH time budget, the sliced-vs-layer and
 # direct-vs-tile_concat makespan wins on 8 workers, the >=2x comm-volume
-# reduction of halo-aware direct edges on sliced inception, and the trend
-# gates against the committed BENCH_sched.json — 2x on scheduler timings,
-# 1.5x on sliced rows' total scheduled transfer bytes (the DSH/ISH ratio
-# bar needs the 2000-node matrix and only runs in the full `make bench`).
-# The smoke run writes to a scratch path so the committed baseline is
-# only refreshed deliberately (make bench).
+# reduction of halo-aware direct edges on sliced inception, the 2-D grid
+# acceptance (search_slice_factors' nested (cout x rows) tiling schedules
+# <= 0.9x the best uniform single-axis tiling on TPU-priced inception(224),
+# 8 workers), and the trend gates against the committed BENCH_sched.json —
+# 2x on scheduler timings, 1.5x on sliced/grid rows' total scheduled
+# transfer bytes (the DSH/ISH ratio bar needs the 2000-node matrix and only
+# runs in the full `make bench`).  The smoke run writes to a scratch path
+# so the committed baseline is only refreshed deliberately (make bench).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -43,7 +43,10 @@ __all__ = ["interpret_plan", "build_mpmd_executor", "plan_liveness"]
 
 
 def _box_index(t: Transfer) -> Tuple[slice, ...]:
-    """Batched register index of a windowed transfer's payload."""
+    """Batched register index of a windowed transfer's payload.
+
+    One slice per per-sample axis, so 2-D grid-tile hulls (a row window ×
+    a channel window) ship exactly like single-axis windows."""
     return (slice(None), *(slice(lo, hi) for (lo, hi) in t.box))
 
 

@@ -137,7 +137,9 @@ def build_plan(schedule: Schedule, dag: DAG, lookahead: bool = True) -> Executio
         """Hull of the windows every consumer of ``u`` scheduled on ``w``
         reads (``None`` = some consumer needs the whole register).  Boxes
         come from DAG node metadata (``in_boxes``, parent-edge aligned),
-        emitted by the operator-granularity slicer."""
+        emitted by the operator-granularity slicer; they are per-axis
+        interval tuples, so hulls of 2-D grid-tile windows (rows ×
+        channels) compose the same way as single-axis windows."""
         hull: Optional[List[Tuple[int, int]]] = None
         found = False
         for c in cm[u]:

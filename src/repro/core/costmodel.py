@@ -36,10 +36,13 @@ def box_bytes(box, dtype_bytes: int = 4) -> float:
     """Byte size of an axis-aligned window ``((lo, hi), ...)``.
 
     The unit the direct-edge slicer prices communication in: a consumer
-    slice's input window intersected with one producer tile.  Used for both
-    DAG edge weights (:meth:`CNNModel.to_dag`) and transfer payload sizes
-    (:class:`repro.codegen.plan.Transfer`), so the scheduler's ``w`` and the
-    executor's shipped bytes agree by construction.
+    slice's input window intersected with one producer tile.  Boxes carry
+    one interval per axis, so the 1-D tilings and the 2-D (cout × rows)
+    grid tiles of the nested tiling IR price through the same formula.
+    Used for both DAG edge weights (:meth:`CNNModel.to_dag`) and transfer
+    payload sizes (:class:`repro.codegen.plan.Transfer`), so the
+    scheduler's ``w`` and the executor's shipped bytes agree by
+    construction.
     """
     n = float(dtype_bytes)
     for lo, hi in box:
@@ -170,7 +173,10 @@ def matmul_cost(m: int, k: int, n: int, dtype_bytes: int = 2) -> OpCost:
 # the layer's FLOPs), while its bytes account for what the tile actually
 # touches — the full (or halo) input region it reads, its own weight slice,
 # and its own output tile.  Input re-reads across tiles mean bytes, unlike
-# FLOPs, are super-additive; the roofline `t` inherits that.
+# FLOPs, are super-additive; the roofline `t` inherits that.  The helpers
+# take output rows *and* channel-tile extents independently, so 1-D tiles
+# and 2-D (cout × rows) grid tiles cost through the same formulas — a grid
+# trades halo re-reads (rows) against input re-reads (channels).
 # --------------------------------------------------------------------- #
 def conv2d_slice_cost(
     in_rows: int, in_cols: int, cin: int, kh: int, kw: int,

@@ -37,8 +37,12 @@ class DAG:
     w:       mapping edge -> communication latency if endpoints differ.
     meta:    optional per-node metadata.  Operator-granularity DAGs use it to
              record each slice task's originating layer and tile coordinates
-             (keys ``origin``/``tile``/``op``); schedulers ignore it, but
-             plan summaries and benchmarks group nodes by origin through it.
+             (keys ``origin``/``tile``/``op``; grid tiles carry
+             ``("grid", (row_lo, row_hi), (c_lo, c_hi))``) plus the
+             per-parent input windows (``in_boxes``, one per-axis interval
+             tuple per parent edge) that ``build_plan`` turns into windowed
+             transfer hulls; schedulers ignore it, but plan summaries and
+             benchmarks group nodes by origin through it.
 
     Adjacency queries (``parents``/``children``/``topological_order``/
     ``levels``/...) are memoized on first use: the DAG is immutable, so the

@@ -182,10 +182,12 @@ class CNNModel:
         Edge weights default to the *producer's* output bytes, so slice-task
         edges are priced at actual tile bytes; direct slice-to-slice edges
         carry ``attrs["in_boxes"]`` — the consumer-window ∩ producer-tile
-        intersection — and are priced at exactly those bytes.  Node metadata
-        records each task's op, originating layer, tile coordinates and
-        input boxes (``in_boxes``, parent-edge aligned), which
-        ``build_plan`` uses to ship windowed transfer payloads.
+        intersection — and are priced at exactly those bytes.  Boxes are
+        per-axis interval tuples, so 1-D tiles and 2-D (cout × rows) grid
+        tiles price identically.  Node metadata records each task's op,
+        originating layer, tile coordinates and input boxes (``in_boxes``,
+        parent-edge aligned), which ``build_plan`` uses to ship windowed
+        transfer payloads.
         """
         t = {l.name: max(l.cost().time(hw) / time_unit, 1e-3) for l in self.layers}
         edges = []
@@ -218,44 +220,55 @@ class CNNModel:
 # op semantics (batched NHWC)
 # --------------------------------------------------------------------------- #
 def _assemble_inputs(
-    layout, inputs: Sequence[jax.Array]
-) -> Tuple[List[jax.Array], List[Tuple[Optional[int], int]]]:
-    """Reassemble logical inputs from direct tile edges.
+    layout, boxes, inputs: Sequence[jax.Array]
+) -> Tuple[List[jax.Array], List[Tuple[int, int]]]:
+    """Reassemble logical inputs from direct tile edges (nested tiling IR).
 
     ``layout`` (``attrs["in_layout"]``, from the slicer) maps each logical
-    slot to either ``None`` — one input tensor, passed through — or
-    ``(axis, n_parts, base)``: the next ``n_parts`` inputs are producer
-    tiles, concatenated along per-sample ``axis`` into a block whose first
-    element sits at offset ``base`` of the producer's full extent.  Returns
-    the logical tensors plus per-slot ``(axis, base)`` so ops can shift
-    their static windows into block coordinates.
+    slot to either ``None`` — one input tensor, passed through whole — or
+    ``(base, tree)``: ``tree`` is a nested assembly whose leaves (``None``)
+    consume the next input tensor cropped to its ``boxes`` window
+    (tile-local; ``None`` = the whole tile) and whose internal nodes
+    ``(axis, children)`` concatenate child blocks along per-sample
+    ``axis``.  Cropping every leaf makes the assembled block exactly the
+    consumer's input window, whose per-axis low corner is ``base`` — rows
+    of channel blocks for 2-D grids assemble the same way as 1-D tilings.
+    Returns the logical tensors plus per-slot ``(row, last-axis)`` offsets
+    so ops can shift their static windows into block coordinates.
     """
     vals: List[jax.Array] = []
-    offs: List[Tuple[Optional[int], int]] = []
+    offs: List[Tuple[int, int]] = []
     i = 0
+
+    def build(tree) -> jax.Array:
+        nonlocal i
+        if tree is None:  # leaf: one producer tile, cropped to its window
+            x = inputs[i]
+            crop = boxes[i]
+            i += 1
+            if crop is not None:
+                x = x[(slice(None), *(slice(lo, hi) for (lo, hi) in crop))]
+            return x
+        axis, kids = tree
+        parts = [build(k) for k in kids]
+        bax = axis + 1 if axis >= 0 else axis  # per-sample -> batched axis
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=bax)
+
     for ent in layout:
         if ent is None:
             vals.append(inputs[i])
-            offs.append((None, 0))
+            offs.append((0, 0))
             i += 1
             continue
-        axis, n, base = ent
-        parts = list(inputs[i:i + n])
-        i += n
-        bax = axis + 1 if axis >= 0 else axis  # per-sample -> batched axis
-        vals.append(parts[0] if n == 1 else jnp.concatenate(parts, axis=bax))
-        offs.append((axis, base))
+        base, tree = ent
+        vals.append(build(tree))
+        offs.append((base[0] if len(base) > 1 else 0, base[-1]))
     return vals, offs
 
 
 def _slot_offsets(offs, slot: int) -> Tuple[int, int]:
     """(row offset, last-axis offset) of logical input ``slot``."""
-    axis, base = offs[slot]
-    if axis == 0:
-        return base, 0
-    if axis == -1:
-        return 0, base
-    return 0, 0
+    return offs[slot]
 
 
 def apply_layer(
@@ -265,9 +278,10 @@ def apply_layer(
 ) -> jax.Array:
     a = dict(spec.attrs)
     if "in_layout" in a:
-        inputs, offs = _assemble_inputs(a["in_layout"], inputs)
+        boxes = a.get("in_boxes", (None,) * len(inputs))
+        inputs, offs = _assemble_inputs(a["in_layout"], boxes, inputs)
     else:
-        offs = [(None, 0)] * len(inputs)
+        offs = [(0, 0)] * len(inputs)
     if spec.op == "input":
         (x,) = inputs
         return x
@@ -360,10 +374,10 @@ def apply_layer(
         x1, x2 = inputs
         return x1 + x2
     if spec.op == "tile_concat":
-        ax = a.get("axis", -1)
-        if ax >= 0:
-            ax += 1  # per-sample axis -> batched axis
-        return jnp.concatenate(list(inputs), axis=ax)
+        # glue always carries in_layout (built by the slicer's _glue_spec),
+        # so the nested reassembly already ran above
+        (x,) = inputs
+        return x
     if spec.op == "concat":
         return jnp.concatenate(list(inputs), axis=-1)
     if spec.op == "split":

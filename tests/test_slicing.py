@@ -12,11 +12,14 @@ Covers the four contract pillars:
 * **direct edges** — aligned tilings keep no ``tile_concat`` on the
   dataflow path (glue survives only at reshape/output boundaries), per-edge
   weights equal the consumer-window ∩ producer-tile intersection bytes
-  exactly, and :func:`choose_slice_factors` picks per-layer tile counts at
-  the compute/comm parity point;
+  exactly, and :func:`choose_slice_factors` picks per-layer tile specs
+  (1-D counts and 2-D grids) at the compute/comm parity point;
 * **scheduling payoff** — sliced inception on 8 workers beats both the
-  layer-granularity makespan and the concat slicer, and the
-  ``slice_factor`` knob takes LeNet-5 from ~10 tasks to hundreds.
+  layer-granularity makespan and the concat slicer, and a uniform factor
+  mapping takes LeNet-5 from ~10 tasks to hundreds.
+
+2-D grid geometry and the nested tiling IR itself are covered in
+``test_tiling_ir.py``.
 """
 import numpy as np
 
@@ -41,9 +44,15 @@ from repro.models.slicing import (
     slice_model,
     slicing_summary,
     tile_bounds,
+    uniform_factors,
 )
 
 KEY = jax.random.PRNGKey(0)
+
+
+def U(model, n, spatial=False):
+    """Uniform per-layer factor mapping (the old global slice_factor knob)."""
+    return uniform_factors(model, n, spatial=spatial)
 
 
 def _input_for(model):
@@ -65,7 +74,7 @@ class TestNumericalEquivalence:
             params = model.init_params(KEY)
             x = _input_for(model)
             ref = run_sequential(model, params, x)
-            sliced = slice_model(model, factor, spatial=spatial, direct=direct)
+            sliced = slice_model(model, U(model, factor, spatial), direct=direct)
             y = run_sequential(sliced, params, x)
             assert float(jnp.abs(y - ref).max()) < 1e-4, (model.name, factor)
 
@@ -78,7 +87,7 @@ class TestNumericalEquivalence:
             params = model.init_params(KEY)
             x = _input_for(model)
             ref = run_sequential(model, params, x)
-            sliced = slice_model(model, 4)
+            sliced = slice_model(model, U(model, 4))
             sdag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
             for m in (2, 4, 8):
                 s = heur(sdag, m)
@@ -91,7 +100,7 @@ class TestNumericalEquivalence:
         params = model.init_params(KEY)
         x = _input_for(model)
         ref = run_sequential(model, params, x)
-        sliced = slice_model(model, 4)
+        sliced = slice_model(model, U(model, 4))
         sdag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
         s = ish(sdag, 4)
         eager = build_plan(s, sdag, lookahead=True)
@@ -110,7 +119,7 @@ import jax, jax.numpy as jnp
 from repro.models.cnn import (
     inception_net, lenet5_branchy, run_sequential, transformer_block,
 )
-from repro.models.slicing import slice_model
+from repro.models.slicing import slice_model, uniform_factors
 from repro.core import dsh
 from repro.core.costmodel import KEYSTONE_CPU
 from repro.codegen import build_plan, build_mpmd_executor
@@ -125,7 +134,7 @@ for model, factor, spatial, worker_counts in cases:
     params = model.init_params(key)
     x = jax.random.normal(key, (2, *model.layers[0].out_shape))
     ref = run_sequential(model, params, x)
-    sliced = slice_model(model, factor, spatial=spatial)
+    sliced = slice_model(model, uniform_factors(model, factor, spatial=spatial))
     sdag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
     for m in worker_counts:
         plan = build_plan(dsh(sdag, m), sdag)
@@ -153,13 +162,14 @@ class TestStructure:
         """DAG construction raises on cycles, so a successful build + topo
         sweep is the acyclicity property."""
         model = lenet5_branchy(28)
-        sliced = slice_model(model, factor, spatial=spatial)
+        sliced = slice_model(model, U(model, factor, spatial))
         sdag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
         assert len(sdag.topological_order()) == len(sliced.layers)
 
     def test_slice_factor_one_is_identity(self):
         model = inception_net(64)
-        assert slice_model(model, 1).layers == model.layers
+        assert slice_model(model, {}).layers == model.layers
+        assert slice_model(model, U(model, 1)).layers == model.layers
 
     @pytest.mark.parametrize("spatial", [False, True])
     def test_costs_conserved(self, spatial):
@@ -167,7 +177,7 @@ class TestStructure:
         superadditive (input re-reads) but bounded."""
         for model in (lenet5(28), inception_net(64), transformer_block(32, 64, 8, 128)):
             for factor in (2, 4, 8):
-                sliced = slice_model(model, factor, spatial=spatial)
+                sliced = slice_model(model, U(model, factor, spatial))
                 by_origin = {}
                 for s in sliced.layers:
                     if s.op.endswith("_slice"):
@@ -183,7 +193,7 @@ class TestStructure:
 
     def test_dag_metadata_tracks_origin_and_tiles(self):
         model = lenet5(28)
-        sliced = slice_model(model, 4)
+        sliced = slice_model(model, U(model, 4))
         sdag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
         assert sdag.origin("conv1@s0") == "conv1"
         assert sdag.meta["conv1@s0"]["tile"] == ("cout", 0, 1)
@@ -205,12 +215,12 @@ class TestStructure:
         with its original shape; direct mode keeps exactly the boundary
         adapters a misaligned consumer still needs."""
         model = inception_net(64)
-        sliced = slice_model(model, 4, direct=False)
+        sliced = slice_model(model, U(model, 4), direct=False)
         names = {l.name for l in sliced.layers}
         for l in model.layers:
             assert l.name in names
             assert sliced.spec(l.name).out_shape == l.out_shape
-        direct = slice_model(model, 4)
+        direct = slice_model(model, U(model, 4))
         glue = {l.name for l in direct.layers if l.op == "tile_concat"}
         # exactly the adapters misaligned consumers need survive: avgpool
         # feeds the reshape join, gemm feeds the output — with original
@@ -235,7 +245,7 @@ class TestDirectEdges:
             (lenet5(28), {"pool2", "dense3"}),
             (inception_net(64), {"avgpool", "gemm"}),
         ):
-            sliced = slice_model(model, 8)
+            sliced = slice_model(model, U(model, 8))
             sdag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
             glue = {l.name for l in sliced.layers if l.op == "tile_concat"}
             assert glue == boundary, (model.name, glue)
@@ -264,78 +274,91 @@ class TestDirectEdges:
         """Every direct slice edge is priced at exactly the consumer-window ∩
         producer-tile intersection, recomputed here from tile geometry."""
         model = inception_net(64)
-        sliced = slice_model(model, 4, spatial=spatial)
+        sliced = slice_model(model, U(model, 4, spatial))
         sdag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
         checked = 0
         for l in sliced.layers:
             if not l.op.endswith("_slice") or "in_layout" not in l.attrs:
                 continue
             a = l.attrs
-            flat = 0
-            for ent in a["in_layout"]:
-                if ent is None:
-                    flat += 1
-                    continue
-                axis, n_parts, _base = ent
-                for j in range(flat, flat + n_parts):
-                    pname = l.inputs[j]
-                    pspec = sliced.spec(pname)
-                    box = a["in_boxes"][j]
-                    expect = (
-                        float(np.prod([hi - lo for lo, hi in box])) * 4
-                        if box is not None
-                        else pspec.out_bytes()
-                    )
-                    got = _edge_bytes(sdag, (pname, l.name))
-                    assert got == pytest.approx(expect, rel=1e-6), (l.name, pname)
-                    # independently: recompute the window geometry for
-                    # conv/pool consumers whose producer fed their layer
-                    # directly (seen-through concats shift tile coordinates)
-                    fed_directly = (
-                        "tile" in pspec.attrs
-                        and pspec.attrs.get("origin", pname)
-                        in model.spec(a["origin"]).inputs
-                    )
-                    if l.op in ("conv_slice", "pool_slice") and fed_directly:
-                        h = a["in_shape"][0]
-                        k = a["kernel"] if l.op == "conv_slice" else a.get("kernel", 2)
-                        s = a.get("stride", 1 if l.op == "conv_slice" else 2)
-                        ra, rb, _, _ = _row_window(a["r_lo"], a["r_hi"], h, k, s)
-                        tag, lo, hi = pspec.attrs["tile"]
-                        ph, pw_, pc = pspec.out_shape
-                        if tag == "rows":
-                            rows = min(rb, hi) - max(ra, lo)
-                            chans = (a["c_hi"] - a["c_lo"]
-                                     if l.op == "pool_slice" else pc)
-                        else:  # channel tile
-                            rows = rb - ra
-                            c_lo, c_hi = ((a["c_lo"], a["c_hi"])
-                                          if l.op == "pool_slice" else (0, 10**9))
-                            chans = min(c_hi, hi) - max(c_lo, lo)
-                        assert got == pytest.approx(rows * pw_ * chans * 4,
-                                                    rel=1e-6), (l.name, pname)
-                        checked += 1
-                flat += n_parts
+            for j, pname in enumerate(l.inputs):
+                pspec = sliced.spec(pname)
+                box = a["in_boxes"][j]
+                expect = (
+                    float(np.prod([hi - lo for lo, hi in box])) * 4
+                    if box is not None
+                    else pspec.out_bytes()
+                )
+                got = _edge_bytes(sdag, (pname, l.name))
+                assert got == pytest.approx(expect, rel=1e-6), (l.name, pname)
+                # independently: recompute the window geometry for
+                # conv/pool consumers whose producer fed their layer
+                # directly (seen-through concats shift tile coordinates)
+                fed_directly = (
+                    "tile" in pspec.attrs
+                    and pspec.attrs.get("origin", pname)
+                    in model.spec(a["origin"]).inputs
+                )
+                if l.op in ("conv_slice", "pool_slice") and fed_directly:
+                    h = a["in_shape"][0]
+                    k = a["kernel"] if l.op == "conv_slice" else a.get("kernel", 2)
+                    s = a.get("stride", 1 if l.op == "conv_slice" else 2)
+                    ra, rb, _, _ = _row_window(a["r_lo"], a["r_hi"], h, k, s)
+                    tag, lo, hi = pspec.attrs["tile"]
+                    ph, pw_, pc = pspec.out_shape
+                    if tag == "rows":
+                        rows = min(rb, hi) - max(ra, lo)
+                        chans = (a["c_hi"] - a["c_lo"]
+                                 if l.op == "pool_slice" else pc)
+                    else:  # channel tile
+                        rows = rb - ra
+                        c_lo, c_hi = ((a["c_lo"], a["c_hi"])
+                                      if l.op == "pool_slice" else (0, 10**9))
+                        chans = min(c_hi, hi) - max(c_lo, lo)
+                    assert got == pytest.approx(rows * pw_ * chans * 4,
+                                                rel=1e-6), (l.name, pname)
+                    checked += 1
         assert checked > 20
 
     def test_choose_slice_factors_tracks_roofline_parity(self):
         model = inception_net(64)
-        factors = choose_slice_factors(model, KEYSTONE_CPU, max_factor=8)
+        factors = choose_slice_factors(model, KEYSTONE_CPU, max_factor=8,
+                                       grid=False)
         # compute-heavy convs slice to the cap; every chosen factor >= 2
         assert factors["conv_1"] == 8 and factors["conv_2"] == 8
         assert all(f >= 2 for f in factors.values())
         # factors never exceed the tiled dimension or the cap
         for name, f in factors.items():
             assert f <= 8
+
+        def n_tiles(v):
+            return v if isinstance(v, int) else v[0] * v[1]
+
+        # the grid search (default) stays within the same tile budget but
+        # splits the stem convs along both axes, and never returns fewer
+        # parity tiles than the 1-D rule (it can switch to the other axis
+        # where the channel rule stalled, e.g. the 28x28 module maxpool)
+        gfactors = choose_slice_factors(model, KEYSTONE_CPU, max_factor=8)
+        assert isinstance(gfactors["conv_1"], tuple)
+        assert isinstance(gfactors["conv_2"], tuple)
+        for name, f in gfactors.items():
+            assert 2 <= n_tiles(f) <= 8, (name, f)
+        for name, f in factors.items():
+            assert n_tiles(gfactors[name]) >= n_tiles(f) or n_tiles(f) == 8, name
+        assert n_tiles(gfactors["inception_1/maxpool"]) > n_tiles(
+            factors["inception_1/maxpool"]
+        )
         # comm-dominated regime collapses to no slicing at all
         import dataclasses as dc
         slow_link = dc.replace(KEYSTONE_CPU, ici_bw=1e3, ici_latency=1.0)
         assert choose_slice_factors(model, slow_link, max_factor=8) == {}
-        # the mapping drives slice_model and stays numerically exact
+        assert choose_slice_factors(model, slow_link, max_factor=8,
+                                    grid=False) == {}
+        # the grid mapping drives slice_model and stays numerically exact
         params = model.init_params(KEY)
         x = _input_for(model)
         ref = run_sequential(model, params, x)
-        auto = slice_model(model, factors)
+        auto = slice_model(model, gfactors)
         assert auto.name.endswith("@auto")
         y = run_sequential(auto, params, x)
         assert float(jnp.abs(y - ref).max()) < 1e-4
@@ -345,8 +368,8 @@ class TestDirectEdges:
         scheduled comm volume drops below whole-register shipping and >= 2x
         below the tile_concat slicer on halo (spatial) inception."""
         model = inception_net(64)
-        direct = slice_model(model, 8, spatial=True)
-        concat = slice_model(model, 8, spatial=True, direct=False)
+        direct = slice_model(model, U(model, 8, True))
+        concat = slice_model(model, U(model, 8, True), direct=False)
         ddag = direct.to_dag(KEYSTONE_CPU, time_unit=1e-6)
         cdag = concat.to_dag(KEYSTONE_CPU, time_unit=1e-6)
         d_bytes = {l.name: l.out_bytes() for l in direct.layers}
@@ -368,8 +391,8 @@ class TestDirectEdges:
         tile_concat lowering at identical factors."""
         model = inception_net(64)
         for spatial in (False, True):
-            d = slice_model(model, 8, spatial=spatial)
-            c = slice_model(model, 8, spatial=spatial, direct=False)
+            d = slice_model(model, U(model, 8, spatial))
+            c = slice_model(model, U(model, 8, spatial), direct=False)
             ddag = d.to_dag(KEYSTONE_CPU, time_unit=1e-6)
             cdag = c.to_dag(KEYSTONE_CPU, time_unit=1e-6)
             for heur in (ish, dsh):
@@ -381,7 +404,7 @@ class TestSchedulingPayoff:
         """Acceptance: lower scheduled makespan than layer-granularity."""
         model = inception_net(64)
         dag = model.to_dag(KEYSTONE_CPU, time_unit=1e-6)
-        sdag = slice_model(model, 8).to_dag(KEYSTONE_CPU, time_unit=1e-6)
+        sdag = slice_model(model, U(model, 8)).to_dag(KEYSTONE_CPU, time_unit=1e-6)
         for heur in (ish, dsh):
             layer_mk = heur(dag, 8).makespan(dag)
             sliced = heur(sdag, 8)
@@ -392,7 +415,7 @@ class TestSchedulingPayoff:
 
     def test_slice_factor_knob_reaches_hundreds_of_tasks(self):
         model = lenet5(28)
-        sliced = slice_model(model, 32)
+        sliced = slice_model(model, U(model, 32))
         assert len(model.layers) == 10
         assert len(sliced.layers) >= 100
         summary = slicing_summary(model, sliced)
@@ -401,7 +424,7 @@ class TestSchedulingPayoff:
     def test_plan_summary_groups_by_origin(self):
         model = inception_net(64)
         # reassembly mode keeps a node per original layer -> exact cover
-        sliced = slice_model(model, 4, direct=False)
+        sliced = slice_model(model, U(model, 4), direct=False)
         sdag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
         plan = build_plan(ish(sdag, 4), sdag)
         ps = plan_summary(plan, sdag)
@@ -409,7 +432,7 @@ class TestSchedulingPayoff:
         assert sum(ps["compute_by_origin"].values()) >= len(sliced.layers)
         # direct mode sees through the module concats (those origins vanish
         # from the task graph entirely) but never invents new ones
-        direct = slice_model(model, 4)
+        direct = slice_model(model, U(model, 4))
         ddag = direct.to_dag(KEYSTONE_CPU, time_unit=1e-6)
         dps = plan_summary(build_plan(ish(ddag, 4), ddag), ddag)
         assert set(dps["compute_by_origin"]) < {l.name for l in model.layers}
