@@ -27,17 +27,30 @@ The TPU-priced paper-size run reproduces the 2-D acceptance number
     PYTHONPATH=src python examples/schedule_sliced.py \
         --model inception --input 224 --hw tpu --grid
 
+``--segmented`` additionally compiles the sliced plan through **both** MPMD
+executors — the unrolled superstep loop and the segmented ``lax.scan``
+executor (packed registers, per-segment kernel tables, ring comm rounds) —
+verifies they agree with the sequential reference, and reports the trace
+(lowering) time of each; on grid-sliced plans the segmented trace stays
+near layer-granularity cost while the unrolled one grows with task count.
+
     PYTHONPATH=src python examples/schedule_sliced.py \
         [--model inception|lenet5|transformer] [--input 64] [--workers 8]
         [--factor 8] [--spatial] [--auto-factors | --grid] [--hw keystone|tpu]
-        [--tighten-s 0]
+        [--tighten-s 0] [--segmented]
 """
 import argparse
+import os
+import time
+
+# the --segmented demo meshes over placeholder host devices; the flag must
+# be set before jax initializes
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import jax.numpy as jnp
 
-from repro.codegen import build_plan, interpret_plan, plan_summary
+from repro.codegen import build_mpmd_executor, build_plan, interpret_plan, plan_summary
 from repro.core import dsh, ish, speedup, tighten_schedule, validate
 from repro.core.costmodel import KEYSTONE_CPU, TPU_V5E
 from repro.models.cnn import (
@@ -124,6 +137,10 @@ def main():
                     help="warm-started branch-and-bound budget (0 = off)")
     ap.add_argument("--skip-exec", action="store_true",
                     help="skip the numerical-equivalence execution check")
+    ap.add_argument("--segmented", action="store_true",
+                    help="compile the sliced plan through the unrolled AND "
+                         "segmented MPMD executors, verify both against the "
+                         "sequential reference, and report trace times")
     args = ap.parse_args()
     if args.spatial and (args.grid or args.auto_factors):
         ap.error("--spatial only applies to uniform factors; the grid/parity "
@@ -199,14 +216,32 @@ def main():
           f"across {ps['origins']} originating layers "
           f"(max {ps['max_transfers_per_origin']} transfers per layer)")
 
-    if not args.skip_exec:
+    if not args.skip_exec or args.segmented:
         key = jax.random.PRNGKey(0)
         params = model.init_params(key)
         x = jax.random.normal(key, (2, *model.layers[0].out_shape))
         ref = run_sequential(model, params, x)
+    if not args.skip_exec:
         y = interpret_plan(plan, sliced, params, x)
         print(f"max|sliced parallel - sequential| = "
               f"{float(jnp.abs(y - ref).max()):.2e}")
+
+    if args.segmented:
+        if jax.device_count() < args.workers:
+            print(f"--segmented: skipped ({jax.device_count()} devices < "
+                  f"{args.workers} workers; set "
+                  f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                  f"{args.workers})")
+            return
+        mesh = jax.make_mesh((args.workers,), ("workers",))
+        for tag, kw in (("unrolled ", {}), ("segmented", {"segmented": True})):
+            f = build_mpmd_executor(plan, sliced, params, mesh, batch=2, **kw)
+            t0 = time.perf_counter()
+            f.lower(x)
+            trace_ms = (time.perf_counter() - t0) * 1e3
+            err = float(jnp.abs(f(x) - ref).max())
+            print(f"{tag} MPMD executor: trace {trace_ms:7.1f} ms, "
+                  f"max|y - sequential| = {err:.2e}")
 
 
 if __name__ == "__main__":

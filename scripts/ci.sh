@@ -6,7 +6,10 @@
 # reduction of halo-aware direct edges on sliced inception, the 2-D grid
 # acceptance (search_slice_factors' nested (cout x rows) tiling schedules
 # <= 0.9x the best uniform single-axis tiling on TPU-priced inception(224),
-# 8 workers), and the trend gates against the committed BENCH_sched.json —
+# 8 workers), the segmented-executor trace acceptance (the lax.scan
+# executor traces grid-sliced inception within 2x of the layer-granularity
+# plan on 8 workers), and the trend gates against the committed
+# BENCH_sched.json —
 # 2x on scheduler timings, 1.5x on sliced/grid rows' total scheduled
 # transfer bytes (the DSH/ISH ratio bar needs the 2000-node matrix and only
 # runs in the full `make bench`).  The smoke run writes to a scratch path

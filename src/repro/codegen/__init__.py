@@ -1,23 +1,37 @@
 from repro.codegen.plan import (
+    CommRound,
     ExecutionPlan,
+    PlanSegment,
     Superstep,
     Transfer,
     build_plan,
+    build_segments,
     coalesce_transfer_steps,
+    pack_registers,
     plan_summary,
 )
-from repro.codegen.executor import interpret_plan, build_mpmd_executor, plan_liveness
+from repro.codegen.executor import (
+    build_mpmd_executor,
+    executed_comm_bytes,
+    interpret_plan,
+    plan_liveness,
+)
 from repro.codegen.render import render_pseudo_c
 
 __all__ = [
+    "CommRound",
     "ExecutionPlan",
+    "PlanSegment",
     "Superstep",
     "Transfer",
     "build_plan",
+    "build_segments",
     "coalesce_transfer_steps",
+    "pack_registers",
     "plan_summary",
     "interpret_plan",
     "build_mpmd_executor",
+    "executed_comm_bytes",
     "plan_liveness",
     "render_pseudo_c",
 ]

@@ -22,6 +22,24 @@ the pairs are split into permutation rounds with unique endpoints, and each
 round ships **one** flattened, concatenated payload per pair — one collective
 per round (the paper's per-channel Writing/Reading pairs, batched the way
 ACETONE's shared-memory ``comm_<src>_<dst>`` arrays batch a whole round).
+``fuse_transfers=False`` instead emits one collective per communicated
+(node, window) group — windowed transfers permute only the boxed slice and
+scatter it on arrival, so the executed volume equals the plan's
+``comm_bytes`` accounting exactly (:func:`executed_comm_bytes`).
+
+**Segmented executor** (``segmented=True``): the unrolled python loop above
+traces every superstep separately, so sliced plans with hundreds of tasks
+are trace-bound.  The segmented path instead consumes the plan-side
+canonicalization (``pack_registers`` + ``build_segments`` in ``plan.py``)
+and lowers each :class:`~repro.codegen.plan.PlanSegment` to **one**
+``lax.scan`` whose carry is the packed register buffer and whose body is a
+single ``lax.switch`` over the segment's kernel table (structurally
+identical tile tasks share one traced branch — see
+:mod:`repro.codegen.segment`) followed by the segment's fixed ring-shift
+``ppermute`` rounds, which gather/scatter padded index rows instead of
+tracing per-transfer slicing.  Program size is bounded by the number of
+*distinct* task structures, not the task count; results stay bit-exact
+against the unrolled path and ``interpret_plan``.
 """
 from __future__ import annotations
 
@@ -35,11 +53,18 @@ from repro.codegen.plan import (
     ExecutionPlan,
     Superstep,
     Transfer,
+    build_segments,
     coalesce_transfer_steps,
+    pack_registers,
 )
 from repro.models.cnn import CNNModel, apply_layer
 
-__all__ = ["interpret_plan", "build_mpmd_executor", "plan_liveness"]
+__all__ = [
+    "interpret_plan",
+    "build_mpmd_executor",
+    "plan_liveness",
+    "executed_comm_bytes",
+]
 
 
 def _box_index(t: Transfer) -> Tuple[slice, ...]:
@@ -174,30 +199,60 @@ def build_mpmd_executor(
     liveness: bool = True,
     fuse_transfers: bool = True,
     coalesce: bool = True,
+    segmented: bool = False,
 ) -> Callable[[jax.Array], jax.Array]:
     """Compile the plan into a jitted shard_map function ``f(x) -> y``.
 
     ``mesh`` must have ``axis`` of size ``plan.n_workers``.  Input ``x`` and
     output are replicated over the axis (P() specs); the result equals the
-    sequential reference on every worker (final broadcast via psum).
+    sequential reference on every worker (final broadcast via psum).  The
+    input's leading dimension must equal ``batch`` — it is baked into the
+    register layout, so the returned function validates it eagerly instead
+    of failing deep inside shard_map.
 
     ``liveness=False`` carries the full per-layer register file across every
     superstep (the original, certification-literal layout); ``liveness=True``
     materializes registers at their birth superstep and drops them after
     their death superstep.  ``fuse_transfers=False`` emits one ``ppermute``
-    per communicated node per permutation round (the original layout);
+    per communicated (node, window) group per permutation round (the
+    original layout, now window-aware: boxed transfers ship exactly their
+    hull, matching :func:`executed_comm_bytes` to the plan's accounting);
     ``fuse_transfers=True`` ships one flattened payload per ``(src, dst)``
     pair and one collective per permutation round — windowed transfers
     contribute only their consumed hull to the payload, so sliced plans'
     fused payloads shrink to tile/halo intersections.  ``coalesce=True``
     merges consecutive transfer-only supersteps into one comm round before
     lowering (fewer unrolled supersteps to trace).
+
+    ``segmented=True`` swaps the unrolled superstep loop for the segmented
+    ``lax.scan`` executor (module docstring): registers live in one packed
+    buffer (``pack_registers``; ``liveness`` controls slot reuse), compute
+    dispatches through per-segment kernel tables, and comm becomes ring
+    rounds over padded index rows (``fuse_transfers`` does not apply).  The
+    unrolled path remains the certification-literal fallback and the
+    equivalence oracle for the segmented one.
     """
+    m = plan.n_workers
+    mesh_axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axis not in mesh_axes:
+        raise KeyError(
+            f"mesh has no axis named {axis!r} (available axes: "
+            f"{tuple(mesh.axis_names)}); build the mesh with "
+            f"jax.make_mesh(({m},), ({axis!r},)) or pass the executor "
+            f"axis=<your axis name>"
+        )
+    if mesh_axes[axis] != m:
+        raise ValueError(
+            f"mesh axis {axis!r} has size {mesh_axes[axis]} but the plan "
+            f"schedules {m} workers; build the mesh with "
+            f"jax.make_mesh(({m},), ({axis!r},))"
+        )
     if coalesce:
         plan = coalesce_transfer_steps(plan)
-    m = plan.n_workers
-    if dict(zip(mesh.axis_names, mesh.devices.shape))[axis] != m:
-        raise ValueError(f"mesh axis {axis!r} must have size {m}")
+    if segmented:
+        return _build_segmented(
+            plan, model, params, mesh, axis, batch, liveness
+        )
 
     reg_names = [l.name for l in model.layers]
     reg_shapes = {
@@ -284,19 +339,29 @@ def build_mpmd_executor(
                     off += sz
 
     def per_node_comm(regs: Dict[str, jax.Array], wid, transfers) -> None:
-        """Original layout: grouped ppermute per communicated node.  ppermute
-        is a strict permutation, so a multicast (one src, several dsts — the
-        paper's repeated Writing ops, e.g. Write 0_2_a/0_3_a in Fig. 11) is
-        split into sub-rounds with unique endpoints."""
-        by_node: Dict[str, List[Transfer]] = {}
+        """Original layout: grouped ppermute per communicated (node, window)
+        group.  ppermute is a strict permutation, so a multicast (one src,
+        several dsts — the paper's repeated Writing ops, e.g. Write
+        0_2_a/0_3_a in Fig. 11) is split into sub-rounds with unique
+        endpoints.  Windowed transfers permute only the boxed slice and
+        scatter it into the destination register on arrival — shipping the
+        whole register would both disagree with ``ExecutionPlan.comm_bytes``
+        (the paper's per-channel byte accounting) and overwrite destination
+        windows that earlier rounds already materialized."""
+        by_key: Dict[Tuple[str, Optional[Tuple]], List[Transfer]] = {}
         for t in transfers:
-            by_node.setdefault(t.node, []).append(t)
-        for node, ts in sorted(by_node.items()):
+            by_key.setdefault((t.node, t.box), []).append(t)
+        for (node, box), ts in sorted(
+            by_key.items(), key=lambda kv: (kv[0][0], kv[0][1] or ())
+        ):
+            idx = None if box is None else _box_index(ts[0])
             for perm in _permutation_rounds([(t.src, t.dst) for t in ts]):
-                moved = jax.lax.ppermute(regs[node], axis, perm)
+                payload = regs[node] if idx is None else regs[node][idx]
+                moved = jax.lax.ppermute(payload, axis, perm)
                 dsts = jnp.asarray([d for (_s, d) in perm])
                 is_dst = jnp.any(wid == dsts)
-                regs[node] = jnp.where(is_dst, moved, regs[node])
+                val = moved if idx is None else regs[node].at[idx].set(moved)
+                regs[node] = jnp.where(is_dst, val, regs[node])
 
     comm = fused_comm if fuse_transfers else per_node_comm
 
@@ -324,4 +389,400 @@ def build_mpmd_executor(
     in_spec = jax.sharding.PartitionSpec()   # replicated input
     out_spec = jax.sharding.PartitionSpec()  # replicated output
     fn = _shard_map(worker_fn, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec)
-    return jax.jit(fn)
+    return _with_batch_check(jax.jit(fn), batch)
+
+
+def _with_batch_check(
+    jitted, batch: int, extra_args: Tuple = ()
+) -> Callable[[jax.Array], jax.Array]:
+    """Wrap a jitted executor with an eager batch-dimension check.
+
+    The batch size is baked into every register shape at build time; calling
+    with a different leading dimension would otherwise surface as an opaque
+    shard_map/switch shape mismatch from deep inside tracing.  The wrapper
+    exposes ``.lower`` (used by the trace benchmarks) with the same check.
+    """
+
+    def check(x) -> None:
+        lead = x.shape[0] if getattr(x, "ndim", 0) else None
+        if lead != batch:
+            raise ValueError(
+                f"this executor was built for batch={batch} (baked into its "
+                f"register layout) but the input has leading dimension "
+                f"{lead}; rebuild with build_mpmd_executor(..., "
+                f"batch={lead})"
+            )
+
+    def run(x: jax.Array) -> jax.Array:
+        check(x)
+        return jitted(x, *extra_args)
+
+    def lower(x: jax.Array):
+        check(x)
+        return jitted.lower(x, *extra_args)
+
+    run.lower = lower
+    return run
+
+
+def executed_comm_bytes(
+    plan: ExecutionPlan,
+    model: CNNModel,
+    batch: int = 1,
+    fuse_transfers: bool = True,
+    coalesce: bool = True,
+    dtype_bytes: int = 4,
+) -> float:
+    """Exact payload bytes the unrolled executor's collectives ship.
+
+    Mirrors the comm lowering analytically: the per-node path ships one
+    payload of the transfer's window per (node, window) group pair, so its
+    total equals ``plan.comm_bytes`` times ``batch * dtype_bytes`` /
+    producer-bytes — the byte-parity property the per-node window fix is
+    tested against.  The fused path pads each round's payload to the
+    round's largest pair, so it is an upper bound on the accounting.
+    """
+    if coalesce:
+        plan = coalesce_transfer_steps(plan)
+    sizes = {l.name: int(np.prod(l.out_shape)) for l in model.layers}
+
+    def t_elems(t: Transfer) -> int:
+        if t.box is None:
+            return sizes[t.node]
+        n = 1
+        for lo, hi in t.box:
+            n *= hi - lo
+        return n
+
+    total = 0
+    for step in plan.steps:
+        if fuse_transfers:
+            pair_ts: Dict[Tuple[int, int], List[Transfer]] = {}
+            for t in step.transfers:
+                pair_ts.setdefault((t.src, t.dst), []).append(t)
+            for round_pairs in _permutation_rounds(sorted(pair_ts)):
+                length = max(
+                    sum(t_elems(t) for t in pair_ts[p]) for p in round_pairs
+                )
+                total += length * len(round_pairs)
+        else:
+            by_key: Dict[Tuple[str, Optional[Tuple]], List[Transfer]] = {}
+            for t in step.transfers:
+                by_key.setdefault((t.node, t.box), []).append(t)
+            for (_node, _box), ts in by_key.items():
+                e = t_elems(ts[0])
+                for perm in _permutation_rounds([(t.src, t.dst) for t in ts]):
+                    total += e * len(perm)
+    return float(total) * batch * dtype_bytes
+
+
+# --------------------------------------------------------------------------- #
+# segmented scan executor
+# --------------------------------------------------------------------------- #
+def _gather_cols(
+    buf: jax.Array, idx: jax.Array, sorted_: bool = False
+) -> jax.Array:
+    """``buf[:, idx]`` as one raw ``lax.gather`` (no jnp indexing machinery —
+    these gathers run once per switch branch and comm round, so their
+    tracing/lowering cost is the segmented executor's hot path).  ``idx``
+    must be in bounds (sentinel indices resolve to real buffer columns);
+    comm rows are pre-sorted by the plan canonicalization."""
+    dnums = jax.lax.GatherDimensionNumbers(
+        offset_dims=(0,), collapsed_slice_dims=(1,), start_index_map=(1,)
+    )
+    return jax.lax.gather(
+        buf, jax.lax.reshape(idx, (idx.shape[0], 1)), dnums,
+        slice_sizes=(buf.shape[0], 1), indices_are_sorted=sorted_,
+        mode=jax.lax.GatherScatterMode.PROMISE_IN_BOUNDS,
+    )
+
+
+def _scatter_cols(buf: jax.Array, idx: jax.Array, vals: jax.Array) -> jax.Array:
+    """``buf.at[:, idx].set(vals)`` as one raw ``lax.scatter``.  Rows are
+    sorted (plan-side) so XLA can lower runs to memcpys; padding entries
+    all point at the dump column — their writes collide in undefined
+    order, which is fine because the dump column is never read."""
+    dnums = jax.lax.ScatterDimensionNumbers(
+        update_window_dims=(0,), inserted_window_dims=(1,),
+        scatter_dims_to_operand_dims=(1,),
+    )
+    return jax.lax.scatter(
+        buf, jax.lax.reshape(idx, (idx.shape[0], 1)), vals, dnums,
+        indices_are_sorted=True, unique_indices=False,
+        mode=jax.lax.GatherScatterMode.PROMISE_IN_BOUNDS,
+    )
+
+
+def _take_row(a: jax.Array, i: jax.Array) -> jax.Array:
+    """``a[i]`` for a traced scalar ``i`` as one raw ``lax.gather``.
+
+    ``lax.dynamic_slice``-family ops canonicalize traced start indices
+    through jnp ufuncs (a wrap-negative ``where(i < 0, i + n, i)`` per
+    call); across hundreds of branch/table lookups that machinery, not the
+    math, dominated segmented trace time.  Indices here are known
+    non-negative, so a single PROMISE_IN_BOUNDS gather replaces it."""
+    dnums = jax.lax.GatherDimensionNumbers(
+        offset_dims=tuple(range(a.ndim - 1)),
+        collapsed_slice_dims=(0,),
+        start_index_map=(0,),
+    )
+    return jax.lax.gather(
+        a, jax.lax.reshape(i, (1,)), dnums,
+        slice_sizes=(1, *a.shape[1:]),
+        mode=jax.lax.GatherScatterMode.PROMISE_IN_BOUNDS,
+    )
+
+
+def _make_branch(sig, tab, x, batch: int, gin_kinds, pidx_identity: bool):
+    """One switch branch: gather the signature's input blocks from the
+    packed buffer through the occurrence's index rows, run the shared
+    kernel with its operand params, scatter the output register back.
+
+    Slots whose index rows are contiguous runs in every occurrence (whole
+    single-register reads — dense/identity/attention inputs) degrade to one
+    ``dynamic_slice`` from a starts table instead of an element gather;
+    ``pidx_identity`` elides the parameter-dedup indirection when every
+    occurrence carries distinct parameters anyway."""
+    from repro.codegen.segment import make_kernel
+
+    kern = make_kernel(sig)
+    slot_shapes = sig[1]
+
+    def branch(buf: jax.Array, oc) -> jax.Array:
+        ins = []
+        for j, shp in enumerate(slot_shapes):
+            sz = int(np.prod(shp)) if shp else 1
+            if gin_kinds[j] == "slice":
+                off = _take_row(tab["gin"][j], oc)
+                # primitive bind skips traced-start canonicalization ufuncs;
+                # offsets are non-negative by construction
+                flat = jax.lax.dynamic_slice_p.bind(
+                    buf, np.int32(0), off, slice_sizes=(batch, sz)
+                )
+            else:
+                flat = _gather_cols(buf, _take_row(tab["gin"][j], oc))
+            ins.append(jax.lax.reshape(flat, (batch, *shp)))
+        pops = ()
+        if "p" in tab:
+            pi = oc if pidx_identity else _take_row(tab["pidx"], oc)
+            pops = [_take_row(p, pi) for p in tab["p"]]
+        y = kern(x, ins, pops).astype(jnp.float32)
+        y2 = jax.lax.reshape(y, (batch, int(np.prod(y.shape)) // batch))
+        return jax.lax.dynamic_update_slice_p.bind(
+            buf, y2, np.int32(0), _take_row(tab["out"], oc)
+        )
+
+    return branch
+
+
+def _build_segmented(
+    plan: ExecutionPlan,
+    model: CNNModel,
+    params,
+    mesh: jax.sharding.Mesh,
+    axis: str,
+    batch: int,
+    liveness: bool,
+) -> Callable[[jax.Array], jax.Array]:
+    """Segmented lax.scan lowering of a (coalesced) plan.
+
+    Plan-side canonicalization (``pack_registers``/``build_segments``)
+    supplies the packed register layout and the per-segment tick/round
+    schema; this builder adds the model-side compute tables — per-segment
+    kernel lists keyed by structural signature, with per-occurrence operand
+    tables (register offsets, deduplicated parameter slices) — and emits
+    one scan per segment.  All tables are passed as jit arguments rather
+    than baked as constants, so tracing cost stays bounded by the number of
+    distinct signatures.
+    """
+    from repro.codegen.segment import (
+        NEGINF_PAD,
+        ZERO_PAD,
+        node_gather_rows,
+        node_signature,
+        param_slices,
+    )
+
+    m = plan.n_workers
+    reg_shapes = {l.name: tuple(l.out_shape) for l in model.layers}
+    reg_sizes = {
+        n: (int(np.prod(s)) if s else 1) for n, s in reg_shapes.items()
+    }
+    live = None
+    if liveness:
+        birth, death, _sets = plan_liveness(plan, model)
+        live = (birth, death)
+    offsets, total = pack_registers(plan, reg_sizes, liveness=live)
+    # three pristine columns follow the registers: ``total`` holds 0.0
+    # (virtualized conv/avgpool halo pads), ``total + 1`` holds -inf
+    # (maxpool halo pads), ``total + 2`` is the dump column comm padding
+    # gathers from and scatters into — so every index is in bounds and
+    # padding can never touch a real register
+    zero_col, neginf_col, dump_col = total, total + 1, total + 2
+    width = total + 3
+    segments = build_segments(plan, reg_shapes, offsets, pad_index=dump_col)
+
+    def resolve(row: np.ndarray) -> np.ndarray:
+        return np.where(
+            row == ZERO_PAD, zero_col,
+            np.where(row == NEGINF_PAD, neginf_col, row),
+        ).astype(np.int32)
+
+    sig_cache: Dict[str, Tuple] = {}
+
+    def sig_of(node: str):
+        if node not in sig_cache:
+            sig_cache[node] = node_signature(model, node)
+        return sig_cache[node]
+
+    seg_meta = []     # per segment: (sig_list, sig_infos, deltas)
+    seg_tables = []   # per segment: pytree of jnp operand tables (jit args)
+    for seg in segments:
+        n_ticks = len(seg.ticks)
+        sig_list: List = []
+        sig_index: Dict = {}
+        occs: List[Dict] = []
+        sig_tab = np.zeros((n_ticks, m), np.int32)
+        occ_tab = np.zeros((n_ticks, m), np.int32)
+        for t, row in enumerate(seg.ticks):
+            for w, node in enumerate(row):
+                if node is None:
+                    continue
+                sig, pkey = sig_of(node)
+                sid = sig_index.get(sig)
+                if sid is None:
+                    sid = sig_index[sig] = len(sig_list)
+                    sig_list.append(sig)
+                    occs.append({"gin": [], "out": [], "pidx": [],
+                                 "uniq": {}, "parrs": []})
+                o = occs[sid]
+                o["gin"].append(node_gather_rows(model, node, offsets))
+                o["out"].append(offsets[node])
+                if pkey is not None:
+                    pi = o["uniq"].get(pkey)
+                    if pi is None:
+                        pi = o["uniq"][pkey] = len(o["parrs"])
+                        o["parrs"].append(param_slices(model, params, pkey))
+                    o["pidx"].append(pi)
+                sig_tab[t, w] = sid + 1  # 0 is the idle branch
+                occ_tab[t, w] = len(o["out"]) - 1
+        sig_tabs = []
+        sig_infos = []
+        for sig, o in zip(sig_list, occs):
+            n_slots = len(sig[1])
+            gin = []
+            gin_kinds = []
+            for j in range(n_slots):
+                rows = resolve(np.stack([r[j] for r in o["gin"]]))
+                runs = rows[:, :1] + np.arange(rows.shape[1], dtype=np.int32)
+                if rows.shape[1] and (rows == runs).all():
+                    # contiguous in every occurrence: one dynamic_slice from
+                    # a starts table instead of an element gather
+                    gin.append(jnp.asarray(rows[:, 0]))
+                    gin_kinds.append("slice")
+                else:
+                    gin.append(jnp.asarray(rows))
+                    gin_kinds.append("rows")
+            tab = {
+                "gin": tuple(gin),
+                "out": jnp.asarray(np.asarray(o["out"], np.int32)),
+            }
+            pidx_identity = True
+            if o["parrs"]:
+                pidx = np.asarray(o["pidx"], np.int32)
+                pidx_identity = bool((pidx == np.arange(len(pidx))).all())
+                if not pidx_identity:
+                    tab["pidx"] = jnp.asarray(pidx)
+                tab["p"] = tuple(
+                    jnp.asarray(np.stack([pa[j] for pa in o["parrs"]]))
+                    for j in range(len(o["parrs"][0]))
+                )
+            sig_tabs.append(tab)
+            sig_infos.append((tuple(gin_kinds), pidx_identity))
+        xs = {
+            "sig": jnp.asarray(sig_tab),
+            "occ": jnp.asarray(occ_tab),
+        }
+        if seg.rounds:
+            xs["slot"] = jnp.asarray(
+                np.stack([r.slot for r in seg.rounds], axis=1)
+            )  # (n_ticks, n_rounds, m)
+            # per (tick, round) activity: rounds fire under lax.cond, so the
+            # many compute-only ticks skip their collectives entirely (the
+            # flag is tick data, identical on every worker — all workers
+            # take the same branch)
+            xs["act"] = jnp.asarray(np.stack(
+                [(r.slot != 0).any(axis=1) for r in seg.rounds], axis=1
+            ).astype(np.int32))  # (n_ticks, n_rounds)
+        seg_meta.append(
+            (sig_list, sig_infos, tuple(r.delta for r in seg.rounds))
+        )
+        seg_tables.append({
+            "xs": xs,
+            "sigs": sig_tabs,
+            "rows": tuple(jnp.asarray(r.rows) for r in seg.rounds),
+        })
+
+    sink_off = offsets[plan.sink]
+    sink_sz = reg_sizes[plan.sink]
+    sink_shape = reg_shapes[plan.sink]
+
+    def worker_fn(x: jax.Array, tables) -> jax.Array:
+        wid = jax.lax.axis_index(axis)
+        buf = jnp.zeros((batch, width), jnp.float32)
+        buf = jax.lax.dynamic_update_slice(
+            buf, jnp.full((batch, 1), -jnp.inf), (0, neginf_col)
+        )
+        for (sig_list, sig_infos, deltas), tabs in zip(seg_meta, tables):
+            branches = [lambda b, oc: b]  # 0: idle worker this tick
+            for sig, info, st in zip(sig_list, sig_infos, tabs["sigs"]):
+                branches.append(_make_branch(sig, st, x, batch, *info))
+            rows = tabs["rows"]
+
+            def body(b, tk, branches=branches, deltas=deltas, rows=rows):
+                b = jax.lax.switch(
+                    _take_row(tk["sig"], wid), branches, b,
+                    _take_row(tk["occ"], wid),
+                )
+                for r, delta in enumerate(deltas):
+                    # one static ring round: worker w ships to w + delta;
+                    # the source gathers the row of its *destination* (the
+                    # row describes what the destination receives, and a
+                    # register's offset is the same on every worker)
+                    def round_(b, r=r, delta=delta, tk=tk):
+                        slot_row = jax.lax.index_in_dim(
+                            tk["slot"], r, 0, False
+                        )
+                        dst = jax.lax.rem(
+                            jax.lax.add(wid, np.int32(delta)), np.int32(m)
+                        )
+                        send = _take_row(rows[r], _take_row(slot_row, dst))
+                        recv = _take_row(rows[r], _take_row(slot_row, wid))
+                        moved = jax.lax.ppermute(
+                            _gather_cols(b, send, sorted_=True), axis,
+                            [(i, (i + delta) % m) for i in range(m)],
+                        )
+                        return _scatter_cols(b, recv, moved)
+
+                    act = jax.lax.index_in_dim(tk["act"], r, 0, False)
+                    b = jax.lax.cond(
+                        jax.lax.gt(act, np.int32(0)),
+                        round_, lambda b: b, b,
+                    )
+                return b, None
+
+            buf, _ = jax.lax.scan(body, buf, tabs["xs"])
+        out = jax.lax.reshape(
+            jax.lax.slice(
+                buf, (0, sink_off), (batch, sink_off + sink_sz)
+            ),
+            (batch, *sink_shape),
+        )
+        out = jnp.where(wid == plan.sink_worker, out, 0.0)
+        return jax.lax.psum(out, axis)
+
+    p_rep = jax.sharding.PartitionSpec()
+    fn = _shard_map(
+        worker_fn, mesh=mesh, in_specs=(p_rep, p_rep), out_specs=p_rep
+    )
+    return _with_batch_check(jax.jit(fn), batch, extra_args=(seg_tables,))

@@ -11,11 +11,32 @@ per-(src,dst) flag+array channel becomes one permute edge.
 The plan is built from the *schedule*, not re-derived: the supplier of each
 cross-worker edge is the schedule's availability argmin, matching the
 improved encoding's earliest-finish semantics (constraint 11).
+
+**Segmented canonicalization** (the second half of this module) re-expresses
+a plan in the uniform shape the segmented ``lax.scan`` executor needs:
+
+* :func:`pack_registers` maps the dict-of-registers onto one packed per-worker
+  buffer — every register gets a static element offset, and (given a liveness
+  pass) dead registers' slots are reused by later births, so the scan carry is
+  a single fixed-size array instead of a per-superstep pytree;
+* :func:`build_segments` chops the plan into **segments** of supersteps,
+  expands each superstep into uniform *ticks* (one node per worker per tick),
+  and lowers every comm round onto a fixed per-segment schema: ring-shift
+  ``ppermute`` rounds (one round per source→destination distance ``δ``, a
+  full static permutation each), payloads padded to one fixed length per
+  round, and per-(tick, worker) gather/scatter **index rows** into the packed
+  buffer.  Padding entries carry ``pad_index`` — the executor points it at a
+  dump column *past every register* (padding lanes gather that column's
+  don't-care bytes and scatter back into it), so padding can never touch a
+  real register or change a shipped window, which
+  :mod:`tests.test_scan_executor` asserts as a property.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
+
+import numpy as np
 
 from repro.core.costmodel import box_bytes as _box_bytes
 from repro.core.graph import DAG
@@ -28,6 +49,10 @@ __all__ = [
     "build_plan",
     "coalesce_transfer_steps",
     "plan_summary",
+    "pack_registers",
+    "build_segments",
+    "CommRound",
+    "PlanSegment",
 ]
 
 Box = Tuple[Tuple[int, int], ...]  # per-sample-axis (lo, hi) payload window
@@ -108,6 +133,15 @@ def build_plan(schedule: Schedule, dag: DAG, lookahead: bool = True) -> Executio
     so picking the earliest-finishing *available* instance is a prefix scan
     — O(V·m + E) per plan instead of O(V²·m).
     """
+    sinks = dag.sinks()
+    if len(sinks) != 1:
+        raise ValueError(
+            f"build_plan supports single-sink DAGs only; this DAG has "
+            f"{len(sinks)} sinks {list(sinks)}.  A multi-sink plan would "
+            "silently drop every output but the first and retire the extra "
+            "sinks' registers early in the liveness pass — merge the outputs "
+            "first (e.g. DAG.one_sink()) or build one plan per output."
+        )
     m = schedule.n_workers
     subs: List[Tuple[Instance, ...]] = [schedule.sub_schedule(w) for w in range(m)]
     heads = [0] * m                        # cursor into each sub-schedule
@@ -148,17 +182,24 @@ def build_plan(schedule: Schedule, dag: DAG, lookahead: bool = True) -> Executio
             ib = dag.meta.get(c, {}).get("in_boxes")
             if ib is None:
                 return None
-            box = ib[pm[c].index(u)]
-            if box is None:
-                return None
-            found = True
-            if hull is None:
-                hull = list(box)
-            else:
-                hull = [
-                    (min(a, lo), max(b, hi))
-                    for (a, b), (lo, hi) in zip(hull, box)
-                ]
+            # a consumer may read the same producer through several slots
+            # (duplicate parent edges — e.g. a residual add of one tensor,
+            # or glue concatenating two windows of one tile); the hull must
+            # cover *every* slot's window, not just the first match
+            for slot, p in enumerate(pm[c]):
+                if p != u:
+                    continue
+                box = ib[slot]
+                if box is None:
+                    return None
+                found = True
+                if hull is None:
+                    hull = list(box)
+                else:
+                    hull = [
+                        (min(a, lo), max(b, hi))
+                        for (a, b), (lo, hi) in zip(hull, box)
+                    ]
         if not found or hull is None:
             return None
         return tuple(hull)
@@ -250,7 +291,6 @@ def build_plan(schedule: Schedule, dag: DAG, lookahead: bool = True) -> Executio
             transfers=tuple(transfers),
         ))
 
-    sinks = dag.sinks()
     sink = sinks[0]
     sink_inst = min(schedule.instances_of(sink), key=lambda i: i.finish(dag))
     return ExecutionPlan(
@@ -288,6 +328,250 @@ def coalesce_transfer_steps(plan: ExecutionPlan) -> ExecutionPlan:
     if len(steps) == len(plan.steps):
         return plan
     return dataclasses.replace(plan, steps=tuple(steps))
+
+
+# --------------------------------------------------------------------------- #
+# segmented canonicalization: packed registers, uniform ticks, ring rounds
+# --------------------------------------------------------------------------- #
+def pack_registers(
+    plan: ExecutionPlan,
+    reg_sizes: Mapping[str, int],
+    liveness: Optional[Tuple[Mapping[str, int], Mapping[str, int]]] = None,
+) -> Tuple[Dict[str, int], int]:
+    """Static element offsets of every register in one packed buffer.
+
+    Returns ``(offsets, total)``: register ``b`` occupies elements
+    ``[offsets[b], offsets[b] + reg_sizes[b])`` of a flat per-worker buffer
+    of ``total`` elements (per sample; the executor carries ``(batch,
+    total)``).  With ``liveness=(birth, death)`` (from ``plan_liveness``),
+    a register whose death superstep precedes another's birth superstep may
+    donate its slot — exact-size reuse keeps the buffer near the plan's
+    working set while every offset stays static, which is what lets the
+    scan carry be one fixed array.  Soundness of reuse: computed registers
+    are fully written at birth, and transfer-materialized registers are
+    read only inside their shipped hull, so a reused slot's stale bytes are
+    never observed.  ``liveness=None`` lays registers out densely in first-
+    appearance order (no reuse).
+    """
+    appear: List[str] = []
+    seen: Set[str] = set()
+    for step in plan.steps:
+        for seg in step.compute:
+            for n in seg:
+                if n not in seen:
+                    seen.add(n)
+                    appear.append(n)
+        for t in step.transfers:
+            if t.node not in seen:
+                seen.add(t.node)
+                appear.append(t.node)
+    offsets: Dict[str, int] = {}
+    total = 0
+    if liveness is None:
+        for n in appear:
+            offsets[n] = total
+            total += int(reg_sizes[n])
+        return offsets, total
+    birth, death = liveness
+    # sweep supersteps; at each step allocate that step's births (first from
+    # same-size slots freed at a strictly earlier step), then release the
+    # slots of registers dying at this step
+    by_birth: Dict[int, List[str]] = {}
+    for n in appear:
+        by_birth.setdefault(birth[n], []).append(n)
+    free: Dict[int, List[Tuple[int, int]]] = {}  # size -> [(freed_step, off)]
+    deaths_at: Dict[int, List[str]] = {}
+    for n in appear:
+        deaths_at.setdefault(death[n], []).append(n)
+    for step in range(len(plan.steps) + 1):
+        for n in by_birth.get(step, ()):
+            sz = int(reg_sizes[n])
+            slot = None
+            for k, (freed, off) in enumerate(free.get(sz, ())):
+                if freed < step:
+                    slot = free[sz].pop(k)[1]
+                    break
+            if slot is None:
+                slot = total
+                total += sz
+            offsets[n] = slot
+        for n in deaths_at.get(step, ()):
+            free.setdefault(int(reg_sizes[n]), []).append((step, offsets[n]))
+    return offsets, total
+
+
+@dataclasses.dataclass(frozen=True)
+class CommRound:
+    """One ring-shift comm round of a segment's uniform schema.
+
+    Every tick of the segment executes the full static permutation
+    ``(w, (w + delta) % n_workers)``; what each pair ships is data, not
+    trace structure: ``rows`` holds the deduplicated gather/scatter index
+    rows (absolute element positions in the packed buffer, padded to
+    ``length`` with ``pad_index``), and ``slot[tick][dst]`` picks the row
+    describing what ``dst`` receives at that tick (row 0 is the all-padding
+    row for inactive (tick, dst) cells).  Because a register has the same
+    offset on every worker, one row serves both ends of a pair: the source
+    gathers the row of its destination, the destination scatters its own.
+    """
+
+    delta: int
+    length: int
+    rows: np.ndarray   # (n_rows, length) int32; rows[0] all pad_index
+    slot: np.ndarray   # (n_ticks, n_workers) int32 -> row id
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSegment:
+    """A run of supersteps lowered to one uniform scan schema.
+
+    ``ticks[t][w]`` is the node worker ``w`` computes at tick ``t`` (``None``
+    = idle); each superstep contributes ``max_w len(compute[w])`` ticks (at
+    least one) and its comm round fires on the step's final tick.  ``rounds``
+    is the segment's fixed set of ring rounds (see :class:`CommRound`).
+    """
+
+    start: int   # first plan superstep (inclusive)
+    stop: int    # past-last plan superstep
+    ticks: Tuple[Tuple[Optional[str], ...], ...]
+    step_of_tick: Tuple[int, ...]
+    rounds: Tuple[CommRound, ...]
+
+
+def _box_positions(
+    off: int, shape: Sequence[int], box: Optional[Box]
+) -> np.ndarray:
+    """Absolute packed-buffer element positions of a register window.
+
+    ``box`` axes align with the leading per-sample axes of ``shape``
+    (trailing axes unboxed = full), exactly like the executor's
+    ``_box_index``."""
+    size = int(np.prod(shape)) if shape else 1
+    if box is None:
+        return np.arange(off, off + size, dtype=np.int64)
+    full = [(0, int(s)) for s in shape]
+    for k, (lo, hi) in enumerate(box):
+        full[k] = (int(lo), int(hi))
+    grids = np.meshgrid(
+        *[np.arange(lo, hi) for (lo, hi) in full], indexing="ij"
+    )
+    flat = np.ravel_multi_index(
+        [g.reshape(-1) for g in grids], tuple(int(s) for s in shape)
+    )
+    return flat.astype(np.int64) + off
+
+
+def _step_round_positions(
+    step: Superstep,
+    reg_shapes: Mapping[str, Tuple[int, ...]],
+    offsets: Mapping[str, int],
+    m: int,
+) -> Dict[int, Dict[int, np.ndarray]]:
+    """delta -> dst worker -> concatenated window positions of one round."""
+    out: Dict[int, Dict[int, List[np.ndarray]]] = {}
+    for t in step.transfers:
+        delta = (t.dst - t.src) % m
+        pos = _box_positions(offsets[t.node], reg_shapes[t.node], t.box)
+        out.setdefault(delta, {}).setdefault(t.dst, []).append(pos)
+    return {
+        d: {w: np.concatenate(chunks) for w, chunks in dsts.items()}
+        for d, dsts in out.items()
+    }
+
+
+def build_segments(
+    plan: ExecutionPlan,
+    reg_shapes: Mapping[str, Tuple[int, ...]],
+    offsets: Mapping[str, int],
+    pad_index: int,
+    split_ratio: float = 16.0,
+) -> List[PlanSegment]:
+    """Canonicalize ``plan`` into uniformly-shaped :class:`PlanSegment`\\ s.
+
+    Supersteps are expanded into ticks (one node per worker per tick) and
+    grouped greedily: a new segment starts when a step's largest comm-round
+    payload differs from the running segment's by more than ``split_ratio``
+    in either direction — merging those would pad every tick of the segment
+    to the outlier's length, while splitting only re-traces the boundary's
+    compute signatures once more.  Within a segment every tick executes the
+    same static program (one switch dispatch + the segment's ring rounds);
+    all per-tick variation lives in the index/descriptor tables.
+    """
+    m = plan.n_workers
+    per_step = []
+    for i, step in enumerate(plan.steps):
+        rounds = _step_round_positions(step, reg_shapes, offsets, m)
+        scale = max(
+            (len(p) for dsts in rounds.values() for p in dsts.values()),
+            default=0,
+        )
+        per_step.append((i, step, rounds, scale))
+
+    groups: List[List[int]] = []
+    seg_scale = 0  # largest payload of the running segment (0 = none yet)
+    for i, _step, _rounds, scale in per_step:
+        split = (
+            groups
+            and scale
+            and seg_scale
+            and max(scale, seg_scale) > split_ratio * min(scale, seg_scale)
+        )
+        if not groups or split:
+            groups.append([i])
+            seg_scale = scale
+        else:
+            groups[-1].append(i)
+            seg_scale = max(seg_scale, scale)
+    segments: List[PlanSegment] = []
+    for grp in groups:
+        ticks: List[Tuple[Optional[str], ...]] = []
+        step_of_tick: List[int] = []
+        comm_at: List[Tuple[int, Dict[int, Dict[int, np.ndarray]]]] = []
+        for i in grp:
+            step = plan.steps[i]
+            n_ticks = max(max((len(s) for s in step.compute), default=0), 1)
+            for j in range(n_ticks):
+                ticks.append(tuple(
+                    seg[j] if j < len(seg) else None for seg in step.compute
+                ))
+                step_of_tick.append(i)
+            comm_at.append((len(ticks) - 1, per_step[i][2]))
+        n_ticks = len(ticks)
+        deltas = sorted({d for (_t, rnds) in comm_at for d in rnds})
+        rounds: List[CommRound] = []
+        for delta in deltas:
+            length = max(
+                len(p)
+                for (_t, rnds) in comm_at
+                for p in rnds.get(delta, {}).values()
+            )
+            pad_row = np.full((length,), pad_index, dtype=np.int32)
+            rows: List[np.ndarray] = [pad_row]
+            row_ids: Dict[bytes, int] = {pad_row.tobytes(): 0}
+            slot = np.zeros((n_ticks, m), dtype=np.int32)
+            for (t, rnds) in comm_at:
+                for dst, pos in rnds.get(delta, {}).items():
+                    row = np.full((length,), pad_index, dtype=np.int32)
+                    row[: len(pos)] = pos.astype(np.int32)
+                    # source gather and destination scatter consume the same
+                    # row, so any lane order is sound — sort it (pad_index is
+                    # the maximum, so padding lands at the tail) to let the
+                    # executor mark its gathers/scatters indices_are_sorted
+                    row = np.sort(row)
+                    rid = row_ids.setdefault(row.tobytes(), len(rows))
+                    if rid == len(rows):
+                        rows.append(row)
+                    slot[t, dst] = rid
+            rounds.append(CommRound(
+                delta=delta, length=length,
+                rows=np.stack(rows), slot=slot,
+            ))
+        segments.append(PlanSegment(
+            start=grp[0], stop=grp[-1] + 1,
+            ticks=tuple(ticks), step_of_tick=tuple(step_of_tick),
+            rounds=tuple(rounds),
+        ))
+    return segments
 
 
 def plan_summary(plan: ExecutionPlan, dag: DAG) -> Dict[str, object]:

@@ -198,13 +198,33 @@ class CNNModel:
             if "tile" in l.attrs:
                 m["tile"] = l.attrs["tile"]
             in_boxes = l.attrs.get("in_boxes")
-            if in_boxes is not None:
-                m["in_boxes"] = in_boxes
-            meta[l.name] = m
+            # a layer may read the same producer through several slots (a
+            # residual add of one tensor, glue concatenating two windows of
+            # one tile): the DAG carries one edge per distinct parent, so
+            # duplicate slots collapse — their windows union (``None`` = a
+            # whole-register read wins), and the edge is priced at the union
+            ded: List[str] = []
+            ded_idx: Dict[str, int] = {}
+            ded_boxes: List[Optional[Tuple[Tuple[int, int], ...]]] = []
             for idx, p in enumerate(self.inputs_of(l.name)):
+                box = in_boxes[idx] if in_boxes is not None else None
+                if p in ded_idx:
+                    j = ded_idx[p]
+                    old = ded_boxes[j]
+                    ded_boxes[j] = None if (old is None or box is None) else tuple(
+                        (min(a, lo), max(b, hi))
+                        for (a, b), (lo, hi) in zip(old, box)
+                    )
+                else:
+                    ded_idx[p] = len(ded)
+                    ded.append(p)
+                    ded_boxes.append(box)
+            if in_boxes is not None:
+                m["in_boxes"] = tuple(ded_boxes)
+            meta[l.name] = m
+            for p, box in zip(ded, ded_boxes):
                 e = (p, l.name)
                 edges.append(e)
-                box = in_boxes[idx] if in_boxes is not None else None
                 b = box_bytes(box) if box is not None else self.spec(p).out_bytes()
                 w[e] = hw.comm_time(b) / time_unit
         return DAG.build(
