@@ -19,6 +19,13 @@ Times the fast-path pipeline across DAG sizes and worker counts:
                           (224) must schedule at most 0.9x the best uniform
                           single-axis tiling on 8 workers (the nested
                           tiling IR acceptance gate)
+* ``fault``             — recovery-cost rows: the deterministic
+                          kill → detect → replan → migrate → resume drill
+                          (``runtime/faults.py``) on sliced lenet5 (always —
+                          the CI fault smoke) and grid-sliced inception(64)
+                          m=8 (full runs); resumed output asserted allclose
+                          to ``run_sequential``, replan wall time and
+                          migrated bytes join the trend gates
 * ``trace``             — shard_map MPMD executor trace (lowering) time on
                           the ``schedule_cnn`` example models **and sliced
                           plans** (``trace_ms`` per sliced plan, unrolled
@@ -294,6 +301,78 @@ def bench_grid(results):
     )
 
 
+def bench_fault_recovery(results, quick):
+    """Recovery-cost rows: the kill → detect → replan → migrate → resume
+    drill on sliced plans (``runtime/faults.py``), with the resumed output
+    asserted allclose to ``run_sequential`` — the CI fault smoke gate.
+
+    Quick mode runs the sliced-lenet5 kill campaign only; the full run adds
+    the headline grid-sliced inception(64) m=8 drill.  Replan wall time
+    joins the timing trend gate (``replan_s``) and migrated bytes are
+    deterministic, so they join the byte trend gate like transfer bytes.
+    """
+    import jax
+    import numpy as np
+    from repro.core.costmodel import KEYSTONE_CPU
+    from repro.models.cnn import inception_net, lenet5, run_sequential
+    from repro.models.slicing import slice_model, uniform_factors
+    from repro.runtime import kill_and_resume_drill
+
+    key = jax.random.PRNGKey(0)
+    cases = [("lenet5", lenet5(28), uniform_factors(lenet5(28), 4), 4, 2, 1)]
+    if not quick:
+        model = inception_net(64)
+        base = uniform_factors(model, 8, spatial=True)
+        grid = {k: ((2, 4) if v == (1, 8) else v) for k, v in base.items()}
+        cases.append(("inception@grid2x4", model, grid, 8, 4, 3))
+    for tag, model, factors, m, kill_step, kill_worker in cases:
+        params = model.init_params(key)
+        x = jax.numpy.zeros((1, *model.layers[0].out_shape)) + jax.random.normal(
+            key, (1, *model.layers[0].out_shape)
+        )
+        ref = run_sequential(model, params, x)
+        sliced = slice_model(model, factors)
+        sdag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
+        t0 = time.perf_counter()
+        res = kill_and_resume_drill(
+            sliced, params, x, sdag, m=m, kill_step=kill_step,
+            kill_worker=kill_worker, hw=KEYSTONE_CPU,
+        )
+        drill_s = time.perf_counter() - t0
+        ok = bool(np.allclose(np.asarray(res["output"]), np.asarray(ref),
+                              atol=1e-4))
+        assert ok, f"fault drill {tag} m={m}: resumed output diverged"
+        assert res["detected"], f"fault drill {tag}: death not detected"
+        assert res["recomputed_supersteps"] <= 1, (
+            f"fault drill {tag}: resumed past the interrupted superstep"
+        )
+        results.append({
+            "kind": "fault_recovery",
+            "model": tag,
+            "n_workers": m,
+            "n_nodes": len(sdag.nodes),
+            "kill_step": res["kill_step"],
+            "kill_worker": res["kill_worker"],
+            "supersteps_old": res["n_steps_old"],
+            "supersteps_new": res["n_steps_new"],
+            "replan_s": round(res["replan_ms"] / 1e3, 4),
+            "migrated_bytes": res["migrated_bytes"],
+            "placements": res["placements"],
+            "completed_nodes": res["completed_nodes"],
+            "recomputed_nodes": res["recomputed_nodes"],
+            "recomputed_supersteps": res["recomputed_supersteps"],
+            "allclose": ok,
+            "drill_s": round(drill_s, 2),
+        })
+        print(
+            f"fault {tag:18s} m={m} kill@{res['kill_step']}/w{res['kill_worker']}: "
+            f"replan {res['replan_ms']:6.1f}ms  migrated "
+            f"{res['migrated_bytes'] / 1e3:7.1f}KB ({res['placements']} "
+            f"placements)  recomputed {res['recomputed_nodes']} nodes / "
+            f"{res['recomputed_supersteps']} superstep  allclose={int(ok)}"
+        )
+
+
 def check_trend(results, baseline_path):
     """Fail on >TREND_FACTOR slowdowns vs the committed baseline rows."""
 
@@ -306,6 +385,8 @@ def check_trend(results, baseline_path):
                     r.get("spatial", False), r["n_workers"])
         if r.get("kind") == "grid_scheduler":
             return ("grid", r["model"], r["input_hw"], r["n_workers"])
+        if r.get("kind") == "fault_recovery":
+            return ("fault", r["model"], r["n_workers"], r["kill_step"])
         return None
 
     if not os.path.exists(baseline_path):
@@ -320,7 +401,7 @@ def check_trend(results, baseline_path):
         b = base.get(key(r))
         if b is None:
             continue
-        for field in ("schedule_s", "plan_s"):
+        for field in ("schedule_s", "plan_s", "replan_s"):
             bv, cv = b.get(field), r.get(field)
             if bv is None or cv is None:
                 continue
@@ -330,15 +411,17 @@ def check_trend(results, baseline_path):
                     f"{key(r)} {field}: {cv}s vs baseline {bv}s "
                     f"(> {TREND_FACTOR}x and > +{TREND_SLACK_S}s)"
                 )
-        # comm-volume gate: scheduled transfer bytes are deterministic, so
-        # any >1.5x growth on a sliced row is a real direct-edge regression
+        # byte-volume gates: scheduled transfer bytes and migrated recovery
+        # bytes are deterministic, so any >1.5x growth is a real regression
         # (a zero-byte baseline row fails on any growth at all)
-        bv, cv = b.get("transfer_bytes"), r.get("transfer_bytes")
-        if bv is not None and cv is not None:
+        for field in ("transfer_bytes", "migrated_bytes"):
+            bv, cv = b.get(field), r.get(field)
+            if bv is None or cv is None:
+                continue
             checked += 1
             if cv > BYTES_TREND_FACTOR * bv:
                 failures.append(
-                    f"{key(r)} transfer_bytes: {cv} vs baseline {bv} "
+                    f"{key(r)} {field}: {cv} vs baseline {bv} "
                     f"(> {BYTES_TREND_FACTOR}x)"
                 )
     if failures:
@@ -539,6 +622,7 @@ def main():
     )
     bench_sliced(workers, results)
     bench_grid(results)
+    bench_fault_recovery(results, args.quick)
 
     # acceptance: ISH @ 1000 nodes / 8 workers under budget
     ish_1000_8 = [

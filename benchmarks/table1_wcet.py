@@ -6,12 +6,25 @@ with DSH, and checks the headline claims:
 
 * whole-network WCET gain  ≈ 8 %   (2.90e10 -> 2.68e10 cycles),
 * parallelizable-segment gain ≈ 46 % (4.81e9 -> 2.60e9 cycles).
+
+**WCET calibration + certificates** (the runtime's deadline authority):
+the roofline cost model prices each layer optimistically; OTAWA's static
+analysis prices the same layers on real silicon.  The per-layer ratio
+``OTAWA / roofline`` calibrates a safety **margin** — derating the
+roofline by the worst observed ratio makes every per-layer roofline bound
+dominate its OTAWA count, so :func:`repro.codegen.plan.wcet_certificate`
+built with that margin certifies per-superstep deadlines the paper's own
+analysis would accept.  The certified total must also cover the DSH
+schedule's predicted makespan (a barrier-synchronized bound can only be
+looser than the overlapped schedule).
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
+from repro.codegen import build_plan, coalesce_transfer_steps, validate_plan, wcet_certificate
 from repro.core import DAG, dsh, ish, validate
+from repro.core.costmodel import KEYSTONE_CPU
 from repro.models.cnn import inception_net
 
 # ---- paper Table 1 (OTAWA WCET bounds, cycles) --------------------------- #
@@ -109,6 +122,94 @@ def validate_claims(rows: List[Dict]) -> Dict[str, bool]:
     }
 
 
+CPU_HZ = 1.4e9  # the paper's Keystone-class core clock
+
+
+def calibrate() -> Dict[str, object]:
+    """Per-layer OTAWA-vs-roofline ratios and the certificate margin.
+
+    Layers whose roofline time is negligible (input/reshape/output glue)
+    are excluded: their OTAWA counts are dominated by fixed overheads the
+    roofline deliberately does not model, and no superstep deadline ever
+    hinges on them.
+    """
+    model = inception_net(224)
+    # time_unit = seconds per cycle -> dag.t is roofline *cycles*
+    rdag = model.to_dag(KEYSTONE_CPU, time_unit=1.0 / CPU_HZ)
+    factors: Dict[str, float] = {}
+    for n in rdag.nodes:
+        roofline = rdag.t[n]
+        if roofline < 1e3:  # glue ops: microseconds of fixed overhead
+            continue
+        factors[n] = TABLE1[n] / roofline
+    margin = max(factors.values())
+    return {
+        "factors": factors,
+        "margin": margin,
+        "median": sorted(factors.values())[len(factors) // 2],
+    }
+
+
+def run_certificate(workers: int = 4) -> Dict[str, object]:
+    """Schedule the paper DAG, validate the plan, emit its certificate.
+
+    The paper DAG's ``t`` *is* the OTAWA WCET table, so the certificate
+    needs no derating margin here — per-superstep compute bounds are
+    already worst-case by the paper's own analysis.  The roofline-vs-OTAWA
+    calibration factors are reported alongside: they are the derating
+    (``HardwareSpec.derate`` / ``wcet_certificate(margin=...)``) to apply
+    when certifying *roofline-priced* sliced plans at runtime, where no
+    OTAWA numbers exist.
+    """
+    dag = paper_dag()
+    model = inception_net(224)
+    sched = dsh(dag, workers)
+    validate(sched, dag)
+    plan = coalesce_transfer_steps(build_plan(sched, dag))
+    validate_plan(plan, dag)  # structural pass on the paper's own plan
+    cal = calibrate()
+    out_bytes = {l.name: float(l.out_bytes()) for l in model.layers}
+    cert = wcet_certificate(
+        plan, dag, out_bytes,
+        comm_time=lambda b: b * CYCLES_PER_BYTE,
+    )
+    return {
+        "bench": "table1_certificate",
+        "workers": workers,
+        "max_factor": cal["margin"],
+        "median_factor": cal["median"],
+        "n_supersteps": cert.n_steps,
+        "certified_cycles": cert.total,
+        "makespan_cycles": plan.makespan,
+        "certificate": cert,
+        "calibration": cal,
+    }
+
+
+def validate_certificate_claims(row: Dict[str, object]) -> Dict[str, bool]:
+    cal = row["calibration"]
+    model = inception_net(224)
+    rdag = model.to_dag(KEYSTONE_CPU, time_unit=1.0 / CPU_HZ)
+    covered = all(
+        rdag.t[n] * cal["margin"] >= TABLE1[n] - 1e-6
+        for n in cal["factors"]
+    )
+    return {
+        # the calibration margin, applied to roofline times, dominates
+        # every OTAWA count — the derating contract runtime certificates
+        # of roofline-priced plans rely on
+        "margin_bounds_otawa": covered,
+        # a barrier-synchronized certificate can only be looser than the
+        # overlapped schedule it certifies
+        "certificate_covers_makespan":
+            row["certified_cycles"] >= row["makespan_cycles"],
+        # but not vacuously: barriers cost at most a small factor over
+        # the overlapped makespan on this DAG
+        "certificate_not_vacuous":
+            row["certified_cycles"] <= 4.0 * row["makespan_cycles"],
+    }
+
+
 def main(argv=None) -> List[Dict]:
     rows = run()
     claims = validate_claims(rows)
@@ -120,6 +221,16 @@ def main(argv=None) -> List[Dict]:
     print(f"table1.paper_refs,whole={PAPER_WHOLE:.2e}(8%),segment={PAPER_SEGMENT:.2e}(46%)")
     for k, v in claims.items():
         print(f"table1.{k},{'PASS' if v else 'FAIL'}")
+    crow = run_certificate()
+    print(f"table1.certificate,max_factor={crow['max_factor']:.2f}x,"
+          f"median_factor={crow['median_factor']:.2f}x,"
+          f"supersteps={crow['n_supersteps']},"
+          f"certified={crow['certified_cycles']:.3e},"
+          f"makespan={crow['makespan_cycles']:.3e}")
+    for k, v in validate_certificate_claims(crow).items():
+        print(f"table1.{k},{'PASS' if v else 'FAIL'}")
+    rows.append({k: v for k, v in crow.items()
+                 if k not in ("certificate", "calibration")})
     return rows
 
 

@@ -8,20 +8,28 @@
 # <= 0.9x the best uniform single-axis tiling on TPU-priced inception(224),
 # 8 workers), the segmented-executor trace acceptance (the lax.scan
 # executor traces grid-sliced inception within 2x of the layer-granularity
-# plan on 8 workers), and the trend gates against the committed
-# BENCH_sched.json —
-# 2x on scheduler timings, 1.5x on sliced/grid rows' total scheduled
-# transfer bytes (the DSH/ISH ratio bar needs the 2000-node matrix and only
-# runs in the full `make bench`).  The smoke run writes to a scratch path
-# so the committed baseline is only refreshed deliberately (make bench).
+# plan on 8 workers), the fault-drill smoke (a deterministic kill campaign
+# on sliced lenet5: detect -> replan m-1 -> migrate registers -> resume,
+# resumed output asserted allclose to run_sequential), and the trend gates
+# against the committed BENCH_sched.json —
+# 2x on scheduler/replan timings, 1.5x on sliced/grid transfer bytes and
+# fault-row migrated bytes (the DSH/ISH ratio bar needs the 2000-node
+# matrix and only runs in the full `make bench`).  The smoke run writes to
+# a scratch path so the committed baseline is only refreshed deliberately
+# (make bench).
+#
+# Plan validation: tests/conftest.py wraps build_plan so validate_plan's
+# static-analysis pass (supplier liveness, register sizing/overlap, ring
+# padding sentinels, tick uniformity, transfer-box bounds) runs over every
+# plan the test suite builds — original and replanned alike.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 pytest =="
+echo "== tier-1 pytest (validate_plan wrapped over every built plan) =="
 timeout 1800 python -m pytest -x -q
 
-echo "== sched_scale smoke (--quick, trend-gated) =="
+echo "== sched_scale smoke (--quick, trend-gated, incl. fault drill) =="
 timeout 600 python benchmarks/sched_scale.py --quick \
   --out "$(mktemp -d)/BENCH_sched.json" --baseline BENCH_sched.json
 

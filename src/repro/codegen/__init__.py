@@ -2,14 +2,19 @@ from repro.codegen.plan import (
     CommRound,
     ExecutionPlan,
     PlanSegment,
+    RegisterLayout,
     Superstep,
     Transfer,
+    WCETCertificate,
     build_plan,
     build_segments,
     coalesce_transfer_steps,
+    migrate_registers,
     pack_registers,
     plan_summary,
+    wcet_certificate,
 )
+from repro.codegen.validate import PlanValidationError, validate_plan
 from repro.codegen.executor import (
     build_mpmd_executor,
     executed_comm_bytes,
@@ -22,13 +27,19 @@ __all__ = [
     "CommRound",
     "ExecutionPlan",
     "PlanSegment",
+    "RegisterLayout",
     "Superstep",
     "Transfer",
+    "WCETCertificate",
     "build_plan",
     "build_segments",
     "coalesce_transfer_steps",
+    "migrate_registers",
     "pack_registers",
     "plan_summary",
+    "wcet_certificate",
+    "PlanValidationError",
+    "validate_plan",
     "interpret_plan",
     "build_mpmd_executor",
     "executed_comm_bytes",

@@ -51,8 +51,10 @@ import numpy as np
 
 from repro.codegen.plan import (
     ExecutionPlan,
+    RegisterLayout,
     Superstep,
     Transfer,
+    _permutation_rounds,
     build_segments,
     coalesce_transfer_steps,
     pack_registers,
@@ -88,24 +90,6 @@ def _shard_map(f, mesh, in_specs, out_specs):
     return _sm(
         f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
     )
-
-
-def _permutation_rounds(pairs):
-    """Split (src, dst) pairs into rounds where srcs and dsts are unique."""
-    rounds = []
-    remaining = list(pairs)
-    while remaining:
-        srcs, dsts, this, rest = set(), set(), [], []
-        for (s, d) in remaining:
-            if s in srcs or d in dsts:
-                rest.append((s, d))
-            else:
-                srcs.add(s)
-                dsts.add(d)
-                this.append((s, d))
-        rounds.append(this)
-        remaining = rest
-    return rounds
 
 
 # --------------------------------------------------------------------------- #
@@ -200,6 +184,7 @@ def build_mpmd_executor(
     fuse_transfers: bool = True,
     coalesce: bool = True,
     segmented: bool = False,
+    checkpoint: bool = False,
 ) -> Callable[[jax.Array], jax.Array]:
     """Compile the plan into a jitted shard_map function ``f(x) -> y``.
 
@@ -231,6 +216,16 @@ def build_mpmd_executor(
     rounds over padded index rows (``fuse_transfers`` does not apply).  The
     unrolled path remains the certification-literal fallback and the
     equivalence oracle for the segmented one.
+
+    ``checkpoint=True`` (segmented only) makes the executor additionally
+    return its packed register carries at every segment boundary:
+    ``f(x) -> (y, snaps)`` with ``snaps`` of shape ``(n_segments,
+    n_workers, batch, width)`` — the fault-tolerant runtime's superstep
+    checkpoints, taken for free at the barriers the scan already
+    synchronizes on.  The returned callable exposes ``.layout`` (the
+    :class:`~repro.codegen.plan.RegisterLayout` of the carry, sentinel
+    columns excluded), ``.width`` and ``.segment_spans`` so recovery code
+    can interpret the snapshots without re-deriving the packing.
     """
     m = plan.n_workers
     mesh_axes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -247,11 +242,18 @@ def build_mpmd_executor(
             f"schedules {m} workers; build the mesh with "
             f"jax.make_mesh(({m},), ({axis!r},))"
         )
+    if checkpoint and not segmented:
+        raise ValueError(
+            "checkpoint=True requires segmented=True: only the segmented "
+            "executor carries the packed register buffer that superstep "
+            "snapshots are defined over"
+        )
     if coalesce:
         plan = coalesce_transfer_steps(plan)
     if segmented:
         return _build_segmented(
-            plan, model, params, mesh, axis, batch, liveness
+            plan, model, params, mesh, axis, batch, liveness,
+            checkpoint=checkpoint,
         )
 
     reg_names = [l.name for l in model.layers]
@@ -583,6 +585,7 @@ def _build_segmented(
     axis: str,
     batch: int,
     liveness: bool,
+    checkpoint: bool = False,
 ) -> Callable[[jax.Array], jax.Array]:
     """Segmented lax.scan lowering of a (coalesced) plan.
 
@@ -727,12 +730,13 @@ def _build_segmented(
     sink_sz = reg_sizes[plan.sink]
     sink_shape = reg_shapes[plan.sink]
 
-    def worker_fn(x: jax.Array, tables) -> jax.Array:
+    def worker_fn(x: jax.Array, tables):
         wid = jax.lax.axis_index(axis)
         buf = jnp.zeros((batch, width), jnp.float32)
         buf = jax.lax.dynamic_update_slice(
             buf, jnp.full((batch, 1), -jnp.inf), (0, neginf_col)
         )
+        snaps: List[jax.Array] = []
         for (sig_list, sig_infos, deltas), tabs in zip(seg_meta, tables):
             branches = [lambda b, oc: b]  # 0: idle worker this tick
             for sig, info, st in zip(sig_list, sig_infos, tabs["sigs"]):
@@ -772,6 +776,8 @@ def _build_segmented(
                 return b, None
 
             buf, _ = jax.lax.scan(body, buf, tabs["xs"])
+            if checkpoint:
+                snaps.append(buf)
         out = jax.lax.reshape(
             jax.lax.slice(
                 buf, (0, sink_off), (batch, sink_off + sink_sz)
@@ -779,10 +785,26 @@ def _build_segmented(
             (batch, *sink_shape),
         )
         out = jnp.where(wid == plan.sink_worker, out, 0.0)
-        return jax.lax.psum(out, axis)
+        out = jax.lax.psum(out, axis)
+        if checkpoint:
+            # (n_segments, 1, batch, width) per worker; the worker axis is
+            # concatenated by shard_map into (n_segments, m, batch, width)
+            return out, jnp.stack(snaps)[:, None]
+        return out
 
     p_rep = jax.sharding.PartitionSpec()
-    fn = _shard_map(
-        worker_fn, mesh=mesh, in_specs=(p_rep, p_rep), out_specs=p_rep
+    out_specs = (
+        (p_rep, jax.sharding.PartitionSpec(None, axis))
+        if checkpoint else p_rep
     )
-    return _with_batch_check(jax.jit(fn), batch, extra_args=(seg_tables,))
+    fn = _shard_map(
+        worker_fn, mesh=mesh, in_specs=(p_rep, p_rep), out_specs=out_specs
+    )
+    wrapped = _with_batch_check(jax.jit(fn), batch, extra_args=(seg_tables,))
+    wrapped.layout = RegisterLayout(
+        offsets=offsets, total=total,
+        shapes={n: reg_shapes[n] for n in offsets},
+    )
+    wrapped.width = width
+    wrapped.segment_spans = tuple((s.start, s.stop) for s in segments)
+    return wrapped

@@ -53,6 +53,10 @@ __all__ = [
     "build_segments",
     "CommRound",
     "PlanSegment",
+    "RegisterLayout",
+    "migrate_registers",
+    "WCETCertificate",
+    "wcet_certificate",
 ]
 
 Box = Tuple[Tuple[int, int], ...]  # per-sample-axis (lo, hi) payload window
@@ -330,6 +334,31 @@ def coalesce_transfer_steps(plan: ExecutionPlan) -> ExecutionPlan:
     return dataclasses.replace(plan, steps=tuple(steps))
 
 
+def _permutation_rounds(pairs):
+    """Split (src, dst) pairs into rounds where srcs and dsts are unique.
+
+    ``lax.ppermute`` is a strict permutation, so a comm round with repeated
+    endpoints (multicasts, fan-ins) is executed as several sub-rounds.  The
+    executor lowers comm with this exact split, and the WCET certificate
+    prices it with the same split, so the certified bound covers the
+    collectives the executor actually emits.
+    """
+    rounds = []
+    remaining = list(pairs)
+    while remaining:
+        srcs, dsts, this, rest = set(), set(), [], []
+        for (s, d) in remaining:
+            if s in srcs or d in dsts:
+                rest.append((s, d))
+            else:
+                srcs.add(s)
+                dsts.add(d)
+                this.append((s, d))
+        rounds.append(this)
+        remaining = rest
+    return rounds
+
+
 # --------------------------------------------------------------------------- #
 # segmented canonicalization: packed registers, uniform ticks, ring rounds
 # --------------------------------------------------------------------------- #
@@ -398,6 +427,269 @@ def pack_registers(
         for n in deaths_at.get(step, ()):
             free.setdefault(int(reg_sizes[n]), []).append((step, offsets[n]))
     return offsets, total
+
+
+@dataclasses.dataclass(frozen=True)
+class RegisterLayout:
+    """Packed register layout of one plan: where every register lives.
+
+    Wraps :func:`pack_registers`' ``(offsets, total)`` together with the
+    per-sample register shapes so runtime components (superstep snapshots,
+    :func:`migrate_registers`, plan validation) can pack/unpack per-worker
+    carry buffers without re-deriving the layout.  Layouts are deterministic
+    functions of ``(plan, shapes, liveness)``, so the checkpointing runner,
+    the segmented executor and the migration pass all agree on offsets by
+    construction.
+    """
+
+    offsets: Mapping[str, int]
+    total: int
+    shapes: Mapping[str, Tuple[int, ...]]
+
+    @staticmethod
+    def of(
+        plan: "ExecutionPlan",
+        reg_shapes: Mapping[str, Tuple[int, ...]],
+        liveness: Optional[Tuple[Mapping[str, int], Mapping[str, int]]] = None,
+    ) -> "RegisterLayout":
+        sizes = {
+            n: (int(np.prod(s)) if s else 1) for n, s in reg_shapes.items()
+        }
+        offsets, total = pack_registers(plan, sizes, liveness=liveness)
+        return RegisterLayout(
+            offsets=offsets, total=total,
+            shapes={n: tuple(reg_shapes[n]) for n in offsets},
+        )
+
+    def size(self, node: str) -> int:
+        s = self.shapes[node]
+        return int(np.prod(s)) if s else 1
+
+    def pack(
+        self, regs: Mapping[str, np.ndarray], batch: int
+    ) -> np.ndarray:
+        """One packed ``(batch, total)`` carry from a register dict.
+
+        Registers absent from ``regs`` (dead or not yet born) leave their
+        slot zeroed — matching the executor's zero-initialized carry."""
+        buf = np.zeros((batch, self.total), dtype=np.float32)
+        for n, v in regs.items():
+            off = self.offsets[n]
+            buf[:, off:off + self.size(n)] = np.asarray(v).reshape(batch, -1)
+        return buf
+
+    def unpack(
+        self, buf: np.ndarray, nodes: Sequence[str], batch: int
+    ) -> Dict[str, np.ndarray]:
+        """Register dict view of selected registers of a packed carry."""
+        out: Dict[str, np.ndarray] = {}
+        for n in nodes:
+            off = self.offsets[n]
+            out[n] = np.asarray(buf[:, off:off + self.size(n)]).reshape(
+                batch, *self.shapes[n]
+            )
+        return out
+
+
+def _computed_before(plan: ExecutionPlan, step: int) -> Dict[str, int]:
+    """node -> first worker that computed it in supersteps ``[0, step)``."""
+    first: Dict[str, int] = {}
+    for s in plan.steps[:step]:
+        for w, seg in enumerate(s.compute):
+            for n in seg:
+                first.setdefault(n, w)
+    return first
+
+
+def plan_computers(plan: ExecutionPlan) -> Dict[str, Tuple[int, ...]]:
+    """node -> every worker that computes it somewhere in ``plan``."""
+    by: Dict[str, List[int]] = {}
+    for s in plan.steps:
+        for w, seg in enumerate(s.compute):
+            for n in seg:
+                ws = by.setdefault(n, [])
+                if w not in ws:
+                    ws.append(w)
+    return {n: tuple(ws) for n, ws in by.items()}
+
+
+def migrate_registers(
+    old_plan: ExecutionPlan,
+    new_plan: ExecutionPlan,
+    old_layout: RegisterLayout,
+    new_layout: RegisterLayout,
+    bufs: Sequence[np.ndarray],
+    step: int,
+) -> Tuple[List[np.ndarray], Set[str], Dict[str, object]]:
+    """Remap a superstep-boundary snapshot into a replanned plan's layout.
+
+    ``bufs`` is the barrier snapshot entering ``old_plan`` superstep
+    ``step``: one packed ``(batch, old_total)`` carry per old worker, in
+    ``old_layout``.  Every value computed in supersteps ``[0, step)`` is
+    remapped by ``(node, window box)`` into ``new_plan``'s register layout:
+    the *full* value lives at its computing worker's old offset (computed
+    registers are fully written at birth — the :func:`pack_registers`
+    soundness invariant), and it is seeded at the new offset on every new
+    worker that ``new_plan`` assigns to compute it.  Windowed transfer
+    materializations (destination registers holding only a shipped hull)
+    are deliberately *not* migrated: the new plan's own comm rounds re-ship
+    exactly the hulls its consumers read, from the seeded computers, so
+    resumed windows are re-established by construction instead of being
+    remapped across incompatible worker sets.
+
+    Slot reuse makes a subtlety explicit: a completed register whose old
+    slot was donated to a later birth holds stale bytes at the barrier.
+    That is safe to migrate — its death preceding ``step`` means every one
+    of its consumers is itself completed (and therefore skipped on resume),
+    so the stale bytes are never read; they are still seeded so the resumed
+    plan's structure (its transfers of that register) stays executable.
+
+    Returns ``(new_bufs, completed, stats)``: per-new-worker packed carries,
+    the set of node names the resumed execution may skip recomputing, and
+    migration cost counters (``migrated_bytes``, ``placements``).
+    """
+    m_new = new_plan.n_workers
+    batch = int(bufs[0].shape[0]) if bufs else 1
+    completed = _computed_before(old_plan, step)
+    new_computes = plan_computers(new_plan)
+    new_bufs = [
+        np.zeros((batch, new_layout.total), dtype=np.float32)
+        for _ in range(m_new)
+    ]
+    migrated = 0
+    placements = 0
+    for node, src_w in completed.items():
+        size = old_layout.size(node)
+        assert size == new_layout.size(node), (
+            f"register {node} changes size across plans "
+            f"({size} vs {new_layout.size(node)})"
+        )
+        o_off = old_layout.offsets[node]
+        val = bufs[src_w][:, o_off:o_off + size]
+        n_off = new_layout.offsets[node]
+        for w in new_computes.get(node, ()):
+            new_bufs[w][:, n_off:n_off + size] = val
+            placements += 1
+            migrated += val.size * 4
+    return new_bufs, set(completed), {
+        "migrated_bytes": migrated,
+        "placements": placements,
+        "completed_nodes": len(completed),
+        "resumed_from_step": step,
+    }
+
+
+# --------------------------------------------------------------------------- #
+# WCET certificates: per-superstep worst-case bounds from the cost model
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class WCETCertificate:
+    """Per-superstep worst-case execution bounds of one plan.
+
+    The paper certifies generated code with per-layer OTAWA WCETs; here the
+    same role is played by the roofline cost model (the DAG's ``t``/``w``
+    annotations).  A plan executes as barrier-synchronized supersteps, so
+    its certified bound is, per superstep,
+
+        compute_bound = max over workers of the sum of t(v) in its segment
+        comm_bound    = sum over permutation sub-rounds of the slowest
+                        (src, dst) pair's payload time
+
+    — the exact shape the MPMD executor lowers (one switch dispatch per
+    worker, one collective per permutation round).  ``margin`` is a safety
+    derating multiplier applied on top.  All bounds are in the DAG's time
+    unit, so they compare directly with the scheduler's makespan and with
+    :class:`~repro.runtime.elastic.HealthMonitor` step timings.
+    """
+
+    compute_bounds: Tuple[float, ...]
+    comm_bounds: Tuple[float, ...]
+    margin: float = 1.0
+    hw_name: str = ""
+
+    @property
+    def step_bounds(self) -> Tuple[float, ...]:
+        return tuple(
+            (c + x) * self.margin
+            for c, x in zip(self.compute_bounds, self.comm_bounds)
+        )
+
+    @property
+    def total(self) -> float:
+        return float(sum(self.step_bounds))
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.compute_bounds)
+
+    def bound(self, step: int) -> float:
+        return self.step_bounds[step]
+
+    def overruns(
+        self, timings: Sequence[Tuple[int, float]], slack: float = 1.0
+    ) -> List[Tuple[int, float]]:
+        """(step, measured) pairs exceeding ``slack`` x the step's bound."""
+        return [
+            (s, dt) for (s, dt) in timings
+            if 0 <= s < self.n_steps and dt > slack * self.bound(s)
+        ]
+
+
+def wcet_certificate(
+    plan: ExecutionPlan,
+    dag: "DAG",
+    out_bytes: Mapping[str, float],
+    hw=None,
+    time_unit: float = 1e-6,
+    margin: float = 1.0,
+    comm_time=None,
+    batch: int = 1,
+) -> WCETCertificate:
+    """Emit the plan's per-superstep worst-case bounds from the cost model.
+
+    ``dag.t`` must be the per-node WCET analogue the schedule was built
+    from (the roofline costs in ``time_unit`` seconds, or OTAWA cycles for
+    the paper's tables).  Communication is priced per permutation sub-round
+    from transfer payload bytes: a windowed transfer contributes its hull
+    (``Transfer.box_bytes``), a whole-register transfer ``out_bytes[node]``,
+    and per-pair payloads within a sub-round overlap, so the round's bound
+    is its slowest pair.  ``comm_time(bytes) -> dag-time-units`` overrides
+    the default ``hw.comm_time(bytes) / time_unit`` pricing (the paper's
+    cycles-per-byte calibration uses this hook).
+    """
+    if comm_time is None:
+        if hw is None:
+            raise ValueError(
+                "wcet_certificate needs a HardwareSpec (hw=) or an explicit "
+                "comm_time(bytes) pricing function for the comm bounds"
+            )
+        comm_time = lambda b: hw.comm_time(b) / time_unit  # noqa: E731
+
+    def t_bytes(t: Transfer) -> float:
+        b = t.box_bytes()
+        return float(out_bytes[t.node] if b is None else b) * batch
+
+    compute_bounds: List[float] = []
+    comm_bounds: List[float] = []
+    for s in plan.steps:
+        compute_bounds.append(max(
+            (sum(dag.t[n] for n in seg) for seg in s.compute), default=0.0
+        ))
+        pair_bytes: Dict[Tuple[int, int], float] = {}
+        for t in s.transfers:
+            pair_bytes[(t.src, t.dst)] = (
+                pair_bytes.get((t.src, t.dst), 0.0) + t_bytes(t)
+            )
+        bound = 0.0
+        for round_pairs in _permutation_rounds(sorted(pair_bytes)):
+            bound += max(comm_time(pair_bytes[p]) for p in round_pairs)
+        comm_bounds.append(bound)
+    return WCETCertificate(
+        compute_bounds=tuple(compute_bounds),
+        comm_bounds=tuple(comm_bounds),
+        margin=margin,
+        hw_name=getattr(hw, "name", "") if hw is not None else "custom",
+    )
 
 
 @dataclasses.dataclass(frozen=True)

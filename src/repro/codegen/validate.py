@@ -1,0 +1,254 @@
+"""Static validation of execution plans (the robustness gate).
+
+ACETONE's argument for generated C is that every structural property is
+checkable *before* deployment; a plan that the executor would mis-run should
+be rejected at generation time, not discovered as a numeric divergence.
+:func:`validate_plan` replays a plan symbolically and enforces the
+invariants every executor in the repo relies on:
+
+* **coverage** — every DAG node is computed at least once, at most once per
+  worker, and only nodes of the DAG appear; the plan's sink is the DAG's
+  sink and is computed on ``sink_worker``;
+* **input availability** — a compute occurrence sees all of its parents
+  locally (computed earlier on the same worker, or delivered by an earlier
+  comm round) before it runs;
+* **supplier liveness** — every transfer's source worker has *computed* the
+  value by the end of the transfer's superstep (a worker that merely
+  received a window must never supply: two hops of one value in a fused
+  round would ship the relay's pre-round register);
+* **transfer sanity** — endpoints in range, no self-transfers, boxes are
+  non-empty well-ordered intervals and (given a model) fit inside the
+  producer's output shape;
+* **register layout** (given a model) — packed offsets place concurrently
+  live registers in disjoint slots inside the buffer
+  (:func:`~repro.codegen.plan.pack_registers` soundness);
+* **segment schema** (given a model) — segments partition the supersteps in
+  order, ticks are uniform (at most one node per worker per tick, ordered
+  as the superstep's segments), and every ring-round index row points only
+  at real register elements with padding strictly at the tail aimed past
+  every register (the sentinel-column contract of the segmented executor).
+
+The pass is pure numpy (no jax), so CI and the elastic replan path run it
+on every plan — original and replanned — before anything executes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.codegen.plan import (
+    ExecutionPlan,
+    RegisterLayout,
+    build_segments,
+)
+from repro.core.graph import DAG
+
+__all__ = ["PlanValidationError", "validate_plan"]
+
+
+class PlanValidationError(ValueError):
+    """A plan violates a structural invariant the executors rely on."""
+
+
+def _fail(msg: str) -> None:
+    raise PlanValidationError(msg)
+
+
+def _check_structure(plan: ExecutionPlan, dag: DAG) -> Dict[str, int]:
+    nodes = set(dag.nodes)
+    pm = dag.parent_map()
+    m = plan.n_workers
+    sinks = dag.sinks()
+    if plan.sink not in sinks:
+        _fail(f"plan sink {plan.sink!r} is not a DAG sink {list(sinks)}")
+    if not (0 <= plan.sink_worker < m):
+        _fail(f"sink worker {plan.sink_worker} out of range for m={m}")
+
+    have: Dict[int, Set[str]] = {w: set() for w in range(m)}
+    computed: Dict[int, Set[str]] = {w: set() for w in range(m)}
+    computed_any: Set[str] = set()
+    n_transfers = 0
+    for i, step in enumerate(plan.steps):
+        if len(step.compute) != m:
+            _fail(
+                f"superstep {i} has {len(step.compute)} compute segments "
+                f"for m={m} workers"
+            )
+        for w, seg in enumerate(step.compute):
+            for n in seg:
+                if n not in nodes:
+                    _fail(f"superstep {i}: unknown node {n!r} on worker {w}")
+                if n in computed[w]:
+                    _fail(
+                        f"superstep {i}: node {n!r} computed twice on "
+                        f"worker {w}"
+                    )
+                missing = [u for u in pm[n] if u not in have[w]]
+                if missing:
+                    _fail(
+                        f"superstep {i}: worker {w} computes {n!r} without "
+                        f"local inputs {missing} (availability violated)"
+                    )
+                have[w].add(n)
+                computed[w].add(n)
+                computed_any.add(n)
+        for t in step.transfers:
+            n_transfers += 1
+            if t.node not in nodes:
+                _fail(f"superstep {i}: transfer of unknown node {t.node!r}")
+            if not (0 <= t.src < m) or not (0 <= t.dst < m):
+                _fail(
+                    f"superstep {i}: transfer {t.label()} endpoints out of "
+                    f"range for m={m}"
+                )
+            if t.src == t.dst:
+                _fail(f"superstep {i}: self-transfer {t.label()}")
+            if t.node not in computed[t.src]:
+                _fail(
+                    f"superstep {i}: transfer {t.label()} sources a worker "
+                    f"that never computed {t.node!r} (supplier liveness)"
+                )
+            if t.box is not None:
+                for (lo, hi) in t.box:
+                    if not (0 <= lo < hi):
+                        _fail(
+                            f"superstep {i}: transfer {t.label()} has a "
+                            f"degenerate box interval ({lo}, {hi})"
+                        )
+            have[t.dst].add(t.node)
+
+    missing = nodes - computed_any
+    if missing:
+        _fail(f"plan never computes {sorted(missing)}")
+    if plan.sink not in computed[plan.sink_worker]:
+        _fail(
+            f"sink {plan.sink!r} is never computed on its designated "
+            f"worker {plan.sink_worker}"
+        )
+    return {"supersteps": len(plan.steps), "transfers": n_transfers}
+
+
+def _check_boxes(plan: ExecutionPlan, shapes: Mapping[str, Tuple[int, ...]]) -> None:
+    for i, step in enumerate(plan.steps):
+        for t in step.transfers:
+            if t.box is None:
+                continue
+            shape = shapes[t.node]
+            if len(t.box) > len(shape):
+                _fail(
+                    f"superstep {i}: transfer {t.label()} box has "
+                    f"{len(t.box)} axes but {t.node!r} is {len(shape)}-d"
+                )
+            for ax, (lo, hi) in enumerate(t.box):
+                if hi > shape[ax]:
+                    _fail(
+                        f"superstep {i}: transfer {t.label()} box axis {ax} "
+                        f"({lo}, {hi}) exceeds producer extent {shape[ax]} "
+                        f"(transfer window outside producer output)"
+                    )
+
+
+def _check_layout(
+    plan: ExecutionPlan,
+    layout: RegisterLayout,
+    liveness: Optional[Tuple[Mapping[str, int], Mapping[str, int]]],
+) -> None:
+    regs = sorted(layout.offsets)
+    for n in regs:
+        off, sz = layout.offsets[n], layout.size(n)
+        if off < 0 or off + sz > layout.total:
+            _fail(
+                f"register {n!r} [{off}, {off + sz}) outside the packed "
+                f"buffer of {layout.total} elements (register sizing)"
+            )
+    if liveness is None:
+        return
+    birth, death = liveness
+    for i, a in enumerate(regs):
+        oa, sa = layout.offsets[a], layout.size(a)
+        for b in regs[i + 1:]:
+            if birth[a] <= death[b] and birth[b] <= death[a]:
+                ob, sb = layout.offsets[b], layout.size(b)
+                if not (oa + sa <= ob or ob + sb <= oa):
+                    _fail(
+                        f"live registers {a!r} and {b!r} overlap in the "
+                        f"packed buffer (register overlap)"
+                    )
+
+
+def _check_segments(
+    plan: ExecutionPlan,
+    layout: RegisterLayout,
+) -> None:
+    pad = layout.total + 2  # the executor's dump column
+    segments = build_segments(plan, layout.shapes, layout.offsets, pad_index=pad)
+    spans = [(s.start, s.stop) for s in segments]
+    if spans and (spans[0][0] != 0 or spans[-1][1] != len(plan.steps)):
+        _fail(f"segments {spans} do not cover supersteps [0, {len(plan.steps)})")
+    for a, b in zip(spans, spans[1:]):
+        if a[1] != b[0]:
+            _fail(f"segments are not contiguous at supersteps {a} -> {b}")
+    m = plan.n_workers
+    for seg in segments:
+        if list(seg.step_of_tick) != sorted(seg.step_of_tick):
+            _fail("segment ticks are not in superstep order (tick uniformity)")
+        for t, row in enumerate(seg.ticks):
+            if len(row) != m:
+                _fail(
+                    f"tick {t} has {len(row)} worker cells for m={m} "
+                    f"(tick uniformity)"
+                )
+        for r in seg.rounds:
+            rows = np.asarray(r.rows)
+            if rows.shape[0] < 1 or not (rows[0] == pad).all():
+                _fail(f"ring round delta={r.delta} row 0 is not all-padding")
+            real = rows != pad
+            if rows[real].size and (
+                rows[real].min() < 0 or rows[real].max() >= layout.total
+            ):
+                _fail(
+                    f"ring round delta={r.delta} indexes outside the "
+                    f"register file [0, {layout.total}) (padding sentinel "
+                    f"contract violated)"
+                )
+            # padding strictly at the tail of every (sorted) row
+            for k in range(rows.shape[0]):
+                row = rows[k]
+                n_real = int((row != pad).sum())
+                if (row[n_real:] != pad).any():
+                    _fail(
+                        f"ring round delta={r.delta} row {k} interleaves "
+                        f"padding with real positions"
+                    )
+
+
+def validate_plan(
+    plan: ExecutionPlan,
+    dag: DAG,
+    model=None,
+    liveness: bool = True,
+) -> Dict[str, int]:
+    """Enforce the plan invariants; raise :class:`PlanValidationError`.
+
+    With ``model`` (a :class:`~repro.models.cnn.CNNModel`), additionally
+    checks transfer boxes against producer output shapes, packed-register
+    sizing/overlap, and the segmented executor's tick/ring-round schema —
+    the full contract the segmented ``lax.scan`` path compiles against.
+    Returns summary statistics for reporting.
+    """
+    stats = _check_structure(plan, dag)
+    if model is not None:
+        shapes = {l.name: tuple(l.out_shape) for l in model.layers}
+        _check_boxes(plan, shapes)
+        live = None
+        if liveness:
+            from repro.codegen.executor import plan_liveness
+
+            birth, death, _sets = plan_liveness(plan, model)
+            live = (birth, death)
+        layout = RegisterLayout.of(plan, shapes, liveness=live)
+        _check_layout(plan, layout, live)
+        _check_segments(plan, layout)
+        stats["packed_elements"] = layout.total
+    return stats

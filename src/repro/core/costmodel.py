@@ -71,6 +71,26 @@ class HardwareSpec:
     def comm_time(self, bytes_moved: float, hops: int = 1) -> float:
         return self.ici_latency * hops + bytes_moved / self.ici_bw
 
+    def derate(self, factor: float) -> "HardwareSpec":
+        """A pessimized copy: throughputs divided by ``factor`` (> 1).
+
+        WCET calibration expresses measured-vs-roofline gaps (e.g. the
+        paper's OTAWA cycle counts vs ideal FLOP time) as a derating of
+        the hardware, so certificates priced on the derated spec bound
+        the observed behaviour instead of the ideal one.  Latencies are
+        costs, not throughputs, so they *scale up* by the same factor.
+        """
+        if factor <= 0:
+            raise ValueError(f"derate factor must be positive, got {factor}")
+        return dataclasses.replace(
+            self,
+            name=f"{self.name}-derated-{factor:g}x",
+            peak_flops=self.peak_flops / factor,
+            hbm_bw=self.hbm_bw / factor,
+            ici_bw=self.ici_bw / factor,
+            ici_latency=self.ici_latency * factor,
+        )
+
 
 # TPU v5e (the target of the dry-run/roofline brief).
 TPU_V5E = HardwareSpec(

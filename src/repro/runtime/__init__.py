@@ -1,8 +1,29 @@
 from repro.runtime.elastic import (
+    ElasticPlan,
+    ElasticPlanner,
     HealthMonitor,
     WorkerState,
-    ElasticPlanner,
     simulate_failure_recovery,
 )
+from repro.runtime.faults import (
+    FaultEvent,
+    FaultPlan,
+    RunOutcome,
+    kill_and_resume_drill,
+    resume_plan,
+    run_with_faults,
+)
 
-__all__ = ["HealthMonitor", "WorkerState", "ElasticPlanner", "simulate_failure_recovery"]
+__all__ = [
+    "ElasticPlan",
+    "ElasticPlanner",
+    "HealthMonitor",
+    "WorkerState",
+    "simulate_failure_recovery",
+    "FaultEvent",
+    "FaultPlan",
+    "RunOutcome",
+    "run_with_faults",
+    "resume_plan",
+    "kill_and_resume_drill",
+]

@@ -15,7 +15,12 @@ Components
   closed — the *same offline DAG scheduler* that produced the original
   m-worker schedule re-solves the problem with ``m' < m`` workers
   (ISH/DSH, §3.3).  Elastic degradation is just "schedule again with fewer
-  cores", exactly the ACETONE offline problem.
+  cores", exactly the ACETONE offline problem.  Given the sliced ``model``
+  the planner runs the *full* pipeline the serving path executes — slice
+  DAG → ``build_plan`` → ``coalesce_transfer_steps`` → ``validate_plan``
+  → WCET certificate — so a degraded plan arrives executable, statically
+  checked, and re-certified, ready for :func:`~repro.codegen.plan.
+  migrate_registers` to seed it from the last barrier snapshot.
 * :func:`simulate_failure_recovery` — end-to-end drill used by tests and
   ``examples/elastic_demo.py``: train, kill a worker, detect, re-plan,
   restore from the latest checkpoint, continue; the loss curve must join.
@@ -29,8 +34,21 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core.graph import DAG
 from repro.core.list_scheduling import dsh, ish
 from repro.core.schedule import Schedule
+from repro.codegen.plan import (
+    ExecutionPlan,
+    WCETCertificate,
+    build_plan,
+    coalesce_transfer_steps,
+    wcet_certificate,
+)
 
-__all__ = ["WorkerState", "HealthMonitor", "ElasticPlanner", "simulate_failure_recovery"]
+__all__ = [
+    "WorkerState",
+    "HealthMonitor",
+    "ElasticPlan",
+    "ElasticPlanner",
+    "simulate_failure_recovery",
+]
 
 
 @dataclasses.dataclass
@@ -38,6 +56,9 @@ class WorkerState:
     worker_id: int
     last_heartbeat: float = 0.0
     step_times: List[float] = dataclasses.field(default_factory=list)
+    # parallel rolling window of (step, dt) pairs — the step index makes
+    # deadline overruns attributable to a specific superstep bound
+    timings: List[Tuple[int, float]] = dataclasses.field(default_factory=list)
     alive: bool = True
     straggler: bool = False
 
@@ -68,28 +89,52 @@ class HealthMonitor:
     def record_step(self, step: int, dt: float, worker: int = 0) -> None:
         w = self.workers[worker]
         w.step_times.append(dt)
+        w.timings.append((step, dt))
         if len(w.step_times) > self.window:
             w.step_times.pop(0)
+        if len(w.timings) > self.window:
+            w.timings.pop(0)
         self.heartbeat(worker)
 
     # ---- verdicts ------------------------------------------------------ #
-    def check(self) -> Dict[str, List[int]]:
-        dead, stragglers = [], []
+    def check(
+        self,
+        certificate: Optional[WCETCertificate] = None,
+        slack: float = 1.0,
+    ) -> Dict[str, List[int]]:
+        """Health verdicts: ``dead``, ``stragglers`` and — given a WCET
+        ``certificate`` — ``deadline`` (workers whose recorded superstep
+        timings exceed ``slack`` × the certified per-step bound).
+
+        Death verdicts are decided *first* and the condemned workers'
+        stale step timings are excluded from the fleet median — a worker
+        that stopped beating minutes ago must not drag the straggler
+        baseline toward its last recorded (possibly pathological) times.
+        The median test uses ``is not None``: a fleet median of exactly
+        0.0 (quantized timers in tests, sub-resolution steps) previously
+        disabled straggler detection entirely.
+        """
+        dead, stragglers, deadline = [], [], []
+        dying = {
+            w.worker_id
+            for w in self.workers.values()
+            if w.alive and self.now - w.last_heartbeat > self.heartbeat_timeout
+        }
         medians = [
             statistics.median(w.step_times)
             for w in self.workers.values()
-            if w.alive and w.step_times
+            if w.alive and w.step_times and w.worker_id not in dying
         ]
         fleet_median = statistics.median(medians) if medians else None
         for w in self.workers.values():
             if not w.alive:
                 continue
-            if self.now - w.last_heartbeat > self.heartbeat_timeout:
+            if w.worker_id in dying:
                 w.alive = False
                 dead.append(w.worker_id)
                 continue
             if (
-                fleet_median
+                fleet_median is not None
                 and w.step_times
                 and statistics.median(w.step_times)
                 > self.straggler_factor * fleet_median
@@ -98,7 +143,13 @@ class HealthMonitor:
                 stragglers.append(w.worker_id)
             else:
                 w.straggler = False
-        return {"dead": dead, "stragglers": stragglers}
+            if certificate is not None and w.timings:
+                if certificate.overruns(w.timings, slack=slack):
+                    deadline.append(w.worker_id)
+        verdict = {"dead": dead, "stragglers": stragglers}
+        if certificate is not None:
+            verdict["deadline"] = deadline
+        return verdict
 
     def alive_workers(self) -> List[int]:
         return [w.worker_id for w in self.workers.values() if w.alive]
@@ -109,7 +160,10 @@ class ElasticPlan:
     workers: Tuple[int, ...]
     schedule: Optional[Schedule]
     makespan: Optional[float]
-    action: str          # "continue" | "remesh" | "exclude_straggler"
+    action: str  # "continue" | "remesh" | "exclude_straggler" | "deadline_replan"
+    # populated by the sliced pipeline (planner built with ``model``):
+    plan: Optional[ExecutionPlan] = None
+    certificate: Optional[WCETCertificate] = None
 
 
 class ElasticPlanner:
@@ -119,14 +173,66 @@ class ElasticPlanner:
     placement graph, or pipeline-stage graph) and re-runs the ACETONE
     scheduler for the surviving worker count — the paper's offline solver
     reused online as the degraded-mode planner.
+
+    Built with just a ``dag`` it returns a bare :class:`Schedule` (the
+    seed-era behaviour).  Built with the sliced ``model`` behind that DAG
+    it runs the full executable pipeline: ``build_plan`` →
+    ``coalesce_transfer_steps`` → :func:`~repro.codegen.validate.
+    validate_plan` (a structurally broken replan is an exception, never a
+    deployed plan) → :func:`~repro.codegen.plan.wcet_certificate` (with
+    ``hw``), so every degraded plan ships with fresh deadline bounds.
     """
 
-    def __init__(self, dag: DAG, heuristic: str = "dsh"):
+    def __init__(
+        self,
+        dag: DAG,
+        heuristic: str = "dsh",
+        model=None,
+        hw=None,
+        time_unit: float = 1e-6,
+        margin: float = 1.0,
+        validate: bool = True,
+    ):
         self.dag = dag
         self.heuristic = {"ish": ish, "dsh": dsh}[heuristic]
+        self.model = model
+        self.hw = hw
+        self.time_unit = time_unit
+        self.margin = margin
+        self.validate = validate
 
-    def replan(self, monitor: HealthMonitor, exclude_stragglers: bool = False) -> ElasticPlan:
-        verdict = monitor.check()
+    def _finalize(self, workers, sched, action: str) -> ElasticPlan:
+        makespan = sched.makespan(self.dag)
+        if self.model is None:
+            return ElasticPlan(tuple(workers), sched, makespan, action)
+        plan = coalesce_transfer_steps(build_plan(sched, self.dag))
+        if self.validate:
+            from repro.codegen.validate import validate_plan
+
+            validate_plan(plan, self.dag, model=self.model)
+        cert = None
+        if self.hw is not None:
+            out_bytes = {
+                l.name: float(_prod(l.out_shape)) * 4
+                for l in self.model.layers
+            }
+            cert = wcet_certificate(
+                plan, self.dag, out_bytes, hw=self.hw,
+                time_unit=self.time_unit, margin=self.margin,
+            )
+        return ElasticPlan(
+            tuple(workers), sched, makespan, action,
+            plan=plan, certificate=cert,
+        )
+
+    def replan(
+        self,
+        monitor: HealthMonitor,
+        exclude_stragglers: bool = False,
+        certificate: Optional[WCETCertificate] = None,
+        slack: float = 1.0,
+    ) -> ElasticPlan:
+        verdict = monitor.check(certificate=certificate, slack=slack)
         workers = monitor.alive_workers()
         action = "continue"
         if verdict["dead"]:
@@ -134,14 +240,24 @@ class ElasticPlanner:
         if exclude_stragglers and verdict["stragglers"]:
             workers = [w for w in workers if w not in verdict["stragglers"]]
             action = "exclude_straggler"
+        if action == "continue" and verdict.get("deadline"):
+            # the fleet is intact but observed supersteps break the
+            # certificate: re-solve so the new plan (and its refreshed
+            # bounds) reflect the hardware we actually have
+            action = "deadline_replan"
         if not workers:
             raise RuntimeError("no healthy workers remain")
         if action == "continue":
             return ElasticPlan(tuple(workers), None, None, action)
         sched = self.heuristic(self.dag, len(workers))
-        return ElasticPlan(
-            tuple(workers), sched, sched.makespan(self.dag), action
-        )
+        return self._finalize(workers, sched, action)
+
+
+def _prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
 
 
 def simulate_failure_recovery(

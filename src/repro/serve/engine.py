@@ -8,10 +8,21 @@ it (prefill writes into the slot), and every engine tick decodes one token
 for all live slots — the standard iteration-level scheduling of modern
 serving systems, here with a static shape (slot count) so each tick is one
 fixed compiled program (predictability — the ACETONE constraint).
+
+Graceful degradation: built with a :class:`~repro.runtime.elastic.
+HealthMonitor` (and optionally an :class:`~repro.runtime.elastic.
+ElasticPlanner`), the engine feeds its tick timings into the monitor and
+periodically asks for a verdict.  An unhealthy fleet (death, stragglers,
+WCET deadline overruns) flips the engine into **degraded mode**: admission
+is throttled to one new request per tick (shedding burst load while the
+fleet shrinks) and, with a planner, a replanned :class:`~repro.runtime.
+elastic.ElasticPlan` — produced by the validated sliced pipeline — is
+published on ``engine.elastic_plan`` for the deployment layer to act on.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -65,10 +76,30 @@ class Request:
 class Engine:
     """Continuous-batching engine over a fixed slot pool (single host)."""
 
-    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig = ServeConfig()):
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        scfg: ServeConfig = ServeConfig(),
+        monitor=None,
+        planner=None,
+        certificate=None,
+        check_every: int = 8,
+        deadline_slack: float = 1.0,
+    ):
         self.cfg = cfg
         self.scfg = scfg
         self.params = params
+        # graceful-degradation wiring (all optional)
+        self.monitor = monitor
+        self.planner = planner
+        self.certificate = certificate
+        self.check_every = check_every
+        self.deadline_slack = deadline_slack
+        self.degraded = False
+        self.elastic_plan = None
+        self.last_verdict: Optional[Dict[str, List[int]]] = None
+        self._ticks = 0
         self._prefill1 = jax.jit(make_prefill_step(cfg, dataclasses.replace(scfg)))
         self._decode = jax.jit(make_decode_step(cfg, scfg), donate_argnums=(1,))
         # slot-pool state: one shared batched cache, per-slot bookkeeping
@@ -87,10 +118,19 @@ class Engine:
         return r
 
     def _admit(self):
-        """Claim free slots for queued requests; prefill their prompt."""
+        """Claim free slots for queued requests; prefill their prompt.
+
+        In degraded mode at most one request is admitted per tick: prefill
+        is the expensive, bursty part of a tick, and a shrinking fleet
+        should drain its live slots rather than take on a full pool of new
+        work between replan and remesh."""
+        admitted = 0
         for s in range(self.scfg.slots):
             if self.slot_req[s] is not None or not self.queue:
                 continue
+            if self.degraded and admitted >= 1:
+                break
+            admitted += 1
             r = self.queue.pop(0)
             # per-slot prefill with a single-sequence cache, then splice in
             tmp_cache = T.init_cache(self.cfg, 1, self.scfg.max_seq)
@@ -103,11 +143,52 @@ class Engine:
             self.slot_req[s] = r
             self.slot_pos[s] = len(r.prompt)
 
+    def check_health(self) -> Optional[Dict[str, List[int]]]:
+        """Ask the monitor for a verdict; enter degraded mode if unhealthy.
+
+        With a planner, an unhealthy verdict also produces a replanned
+        :class:`ElasticPlan` (validated sliced pipeline) on
+        ``self.elastic_plan``.  Returns the verdict (``None`` if no
+        monitor is wired)."""
+        if self.monitor is None:
+            return None
+        if self.planner is not None:
+            plan = self.planner.replan(
+                self.monitor, certificate=self.certificate,
+                slack=self.deadline_slack,
+            )
+            self.last_verdict = verdict = {
+                "dead": [
+                    w for w in self.monitor.workers
+                    if not self.monitor.workers[w].alive
+                ],
+                "stragglers": [
+                    w for w, st in self.monitor.workers.items()
+                    if st.alive and st.straggler
+                ],
+            }
+            if plan.action != "continue":
+                self.elastic_plan = plan
+                self.degraded = True
+        else:
+            self.last_verdict = verdict = self.monitor.check(
+                certificate=self.certificate, slack=self.deadline_slack,
+            )
+            if any(verdict.get(k) for k in ("dead", "stragglers", "deadline")):
+                self.degraded = True
+        return verdict
+
     def tick(self) -> int:
         """One engine iteration: admit + decode one token for all live slots."""
+        t0 = time.perf_counter()
+        self._ticks += 1
+        if self.monitor is not None and self._ticks % self.check_every == 0:
+            self.check_health()
         self._admit()
         live = [s for s in range(self.scfg.slots) if self.slot_req[s] is not None]
         if not live:
+            if self.monitor is not None:
+                self.monitor.record_step(self._ticks, time.perf_counter() - t0)
             return 0
         # a single fixed-shape decode step serves every slot (idle slots too);
         # per-slot positions make ragged continuous batching exact
@@ -123,6 +204,8 @@ class Engine:
                 r.done = True
                 self.slot_req[s] = None
         self.next_tok = toks[:, None].astype(jnp.int32)
+        if self.monitor is not None:
+            self.monitor.record_step(self._ticks, time.perf_counter() - t0)
         return len(live)
 
     def run_until_done(self, max_ticks: int = 10_000) -> None:

@@ -28,3 +28,36 @@ def run_subprocess(code: str, devices: int = 0, timeout: int = 600) -> str:
 @pytest.fixture(scope="session")
 def subproc():
     return run_subprocess
+
+
+def _install_plan_validation() -> None:
+    """Run ``validate_plan`` on every plan ``build_plan`` produces in-suite.
+
+    The static-analysis pass (structural checks only — numpy, no model, no
+    jax) acts as a CI tripwire: any scheduler/plan-construction change that
+    emits a structurally broken plan fails loudly at build time instead of
+    as a numeric divergence three layers down.  Installed at conftest
+    *import* time, before test modules are collected, so ``from
+    repro.codegen import build_plan`` in any test binds the checked
+    wrapper.
+    """
+    sys.path.insert(0, SRC)
+    import repro.codegen as codegen
+    import repro.codegen.plan as plan_mod
+    from repro.codegen.validate import validate_plan
+
+    inner = plan_mod.build_plan
+    if getattr(inner, "_validated", False):  # pragma: no cover
+        return
+
+    def build_plan_checked(schedule, dag, *args, **kwargs):
+        plan = inner(schedule, dag, *args, **kwargs)
+        validate_plan(plan, dag)
+        return plan
+
+    build_plan_checked._validated = True
+    plan_mod.build_plan = build_plan_checked
+    codegen.build_plan = build_plan_checked
+
+
+_install_plan_validation()

@@ -142,3 +142,119 @@ class TestElastic:
         from repro.core import random_dag
         with pytest.raises(RuntimeError):
             ElasticPlanner(random_dag(5, 0.3)).replan(mon)
+
+    def test_dead_worker_excluded_from_fleet_median(self):
+        """Regression: a worker that stopped beating must not drag the
+        straggler baseline with its stale (pathological) step times."""
+        mon = HealthMonitor(4, heartbeat_timeout=10.0, straggler_factor=2.0)
+        for step in range(6):
+            for w in (0, 1):
+                mon.record_step(step, 1.0, worker=w)
+            mon.record_step(step, 2.5, worker=2)   # true straggler
+            mon.record_step(step, 25.0, worker=3)  # wedged, then dies
+        mon.advance(20.0)
+        for step in range(6, 8):
+            for w in (0, 1):
+                mon.record_step(step, 1.0, worker=w)
+            mon.record_step(step, 2.5, worker=2)
+        v = mon.check()
+        assert v["dead"] == [3]
+        # with worker 3's stale 25.0s in the median the fleet baseline was
+        # 1.75 and worker 2 (2.5 < 2 x 1.75) slipped through undetected
+        assert v["stragglers"] == [2]
+
+    def test_straggler_detected_at_zero_median(self):
+        """Regression: a fleet median of exactly 0.0 (quantized timers)
+        previously disabled straggler detection entirely."""
+        mon = HealthMonitor(4, straggler_factor=2.0)
+        for step in range(6):
+            for w in (0, 1, 2):
+                mon.record_step(step, 0.0, worker=w)
+            mon.record_step(step, 1.0, worker=3)
+        v = mon.check()
+        assert v["stragglers"] == [3]
+
+    def test_record_step_attributes_step(self):
+        """Regression: record_step used to drop its ``step`` argument —
+        overruns could not be attributed to a superstep bound."""
+        mon = HealthMonitor(2, window=4)
+        for s, dt in [(0, 1.0), (1, 2.0), (7, 3.0)]:
+            mon.record_step(s, dt, worker=1)
+        assert mon.workers[1].timings == [(0, 1.0), (1, 2.0), (7, 3.0)]
+        assert mon.workers[1].step_times == [1.0, 2.0, 3.0]
+        for s in range(10, 16):  # rolling window caps both views
+            mon.record_step(s, 1.0, worker=1)
+        assert len(mon.workers[1].timings) == 4
+        assert mon.workers[1].timings[-1] == (15, 1.0)
+
+    def test_deadline_verdict_from_certificate(self):
+        from repro.codegen import WCETCertificate
+        cert = WCETCertificate(compute_bounds=(1.0, 1.0),
+                               comm_bounds=(0.0, 0.0))
+        mon = HealthMonitor(2)
+        mon.record_step(0, 0.5, worker=0)   # within bound
+        mon.record_step(1, 5.0, worker=1)   # blows superstep 1's budget
+        v = mon.check(certificate=cert)
+        assert v["deadline"] == [1] and v["dead"] == []
+        # generous slack absorbs the overrun; no certificate, no verdict
+        assert mon.check(certificate=cert, slack=10.0)["deadline"] == []
+        assert "deadline" not in mon.check()
+
+    def test_deadline_overrun_triggers_replan(self):
+        from repro.codegen import WCETCertificate
+        from repro.core import random_dag, validate
+        cert = WCETCertificate(compute_bounds=(1.0,), comm_bounds=(0.0,))
+        dag = random_dag(20, 0.15, seed=5)
+        mon = HealthMonitor(4, heartbeat_timeout=100.0)
+        for w in range(4):
+            mon.record_step(0, 4.0 if w == 2 else 3.0, worker=w)
+        plan = ElasticPlanner(dag).replan(mon, certificate=cert)
+        # fleet intact (nobody dead, nobody a 2x straggler) yet observed
+        # supersteps break the certificate: re-solve rather than coast
+        assert plan.action == "deadline_replan"
+        assert plan.schedule.n_workers == 4
+        validate(plan.schedule, dag)
+
+    def test_sliced_replan_ships_plan_and_certificate(self):
+        from repro.core.costmodel import KEYSTONE_CPU
+        from repro.models.cnn import lenet5
+        from repro.models.slicing import slice_model, uniform_factors
+        model = lenet5()
+        sliced = slice_model(model, uniform_factors(model, 4))
+        sdag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
+        mon = HealthMonitor(4, heartbeat_timeout=1.0)
+        for w in range(4):
+            mon.heartbeat(w)
+        mon.advance(2.0)
+        for w in (0, 1, 2):
+            mon.heartbeat(w)
+        planner = ElasticPlanner(sdag, model=sliced, hw=KEYSTONE_CPU)
+        plan = planner.replan(mon)
+        assert plan.action == "remesh" and plan.workers == (0, 1, 2)
+        assert plan.plan is not None and plan.plan.n_workers == 3
+        assert plan.certificate is not None
+        assert plan.certificate.n_steps == len(plan.plan.steps)
+        assert plan.certificate.total >= plan.plan.makespan
+
+
+class TestEngineDegradation:
+    def test_unhealthy_fleet_flips_degraded_and_throttles_admission(self):
+        cfg = get_config("tinyllama-1.1b").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        mon = HealthMonitor(2, heartbeat_timeout=5.0)
+        eng = Engine(cfg, params, ServeConfig(max_seq=64, slots=3),
+                     monitor=mon, check_every=1)
+        # worker 1 stops beating; worker 0 stays healthy
+        mon.heartbeat(0)
+        mon.heartbeat(1)
+        mon.advance(6.0)
+        mon.heartbeat(0)
+        reqs = [eng.submit([i + 1], max_new=3) for i in range(3)]
+        assert not eng.degraded
+        eng.tick()  # health check fires first, then admission
+        assert eng.degraded
+        assert eng.last_verdict["dead"] == [1]
+        # degraded admission: one new slot per tick instead of the full pool
+        assert sum(r is not None for r in eng.slot_req) == 1
+        eng.run_until_done()
+        assert all(r.done and len(r.out) == 3 for r in reqs)
