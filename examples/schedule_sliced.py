@@ -34,10 +34,17 @@ verifies they agree with the sequential reference, and reports the trace
 (lowering) time of each; on grid-sliced plans the segmented trace stays
 near layer-granularity cost while the unrolled one grows with task count.
 
+``--profile`` builds the segmented executor with per-segment profiling
+hooks and prints a runtime breakdown: for every segment, warm best-of-3
+wall time in ``full`` / ``nocomm`` / ``assemble`` modes, attributing the
+difference columns to comm rounds and kernel work, next to the segment's
+static statistics (ticks, signatures, ring rounds, comm patterns, span
+coverage).
+
     PYTHONPATH=src python examples/schedule_sliced.py \
         [--model inception|lenet5|transformer] [--input 64] [--workers 8]
         [--factor 8] [--spatial] [--auto-factors | --grid] [--hw keystone|tpu]
-        [--tighten-s 0] [--segmented]
+        [--tighten-s 0] [--segmented] [--profile]
 """
 import argparse
 import os
@@ -141,6 +148,12 @@ def main():
                     help="compile the sliced plan through the unrolled AND "
                          "segmented MPMD executors, verify both against the "
                          "sequential reference, and report trace times")
+    ap.add_argument("--profile", action="store_true",
+                    help="per-segment runtime breakdown of the segmented "
+                         "executor: warm best-of-3 wall time per segment in "
+                         "full / no-comm / assembly-only modes (comm = full "
+                         "- nocomm, kernels = nocomm - assembly) next to "
+                         "the static span/round statistics")
     args = ap.parse_args()
     if args.spatial and (args.grid or args.auto_factors):
         ap.error("--spatial only applies to uniform factors; the grid/parity "
@@ -216,7 +229,7 @@ def main():
           f"across {ps['origins']} originating layers "
           f"(max {ps['max_transfers_per_origin']} transfers per layer)")
 
-    if not args.skip_exec or args.segmented:
+    if not args.skip_exec or args.segmented or args.profile:
         key = jax.random.PRNGKey(0)
         params = model.init_params(key)
         x = jax.random.normal(key, (2, *model.layers[0].out_shape))
@@ -226,14 +239,15 @@ def main():
         print(f"max|sliced parallel - sequential| = "
               f"{float(jnp.abs(y - ref).max()):.2e}")
 
-    if args.segmented:
+    if args.segmented or args.profile:
         if jax.device_count() < args.workers:
-            print(f"--segmented: skipped ({jax.device_count()} devices < "
-                  f"{args.workers} workers; set "
+            print(f"--segmented/--profile: skipped ({jax.device_count()} "
+                  f"devices < {args.workers} workers; set "
                   f"XLA_FLAGS=--xla_force_host_platform_device_count="
                   f"{args.workers})")
             return
         mesh = jax.make_mesh((args.workers,), ("workers",))
+    if args.segmented:
         for tag, kw in (("unrolled ", {}), ("segmented", {"segmented": True})):
             f = build_mpmd_executor(plan, sliced, params, mesh, batch=2, **kw)
             t0 = time.perf_counter()
@@ -242,6 +256,61 @@ def main():
             err = float(jnp.abs(f(x) - ref).max())
             print(f"{tag} MPMD executor: trace {trace_ms:7.1f} ms, "
                   f"max|y - sequential| = {err:.2e}")
+
+    if args.profile:
+        profile_segments(plan, sliced, params, mesh, x, ref)
+
+
+def profile_segments(plan, sliced, params, mesh, x, ref):
+    """--profile satellite: per-segment runtime breakdown.
+
+    Replays each segment's jitted body over the stacked carry in three
+    modes — ``full`` (compute + assembly + comm), ``nocomm`` (comm rounds
+    elided) and ``assemble`` (gathers/spans only, kernels elided) — so the
+    differences attribute each segment's wall time to comm, kernels and
+    assembly.  Warm best-of-3 per mode; the carry advances through the
+    *full* mode so every segment profiles against its real input state.
+    Phase splits inherit the host's dispatch noise (single-core CI boxes
+    bounce +-30%); the per-segment ``full`` column and the totals row are
+    the trustworthy numbers."""
+    batch = x.shape[0]
+    f = build_mpmd_executor(plan, sliced, params, mesh, batch=batch,
+                            segmented=True, profile=True)
+    err = float(jnp.abs(f(x) - ref).max())
+    print(f"profiled segmented executor: max|y - sequential| = {err:.2e}")
+
+    def best(fn, *a, n=3):
+        jax.block_until_ready(fn(*a))  # warm-up = compile + 1st dispatch
+        b = None
+        for _ in range(n):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*a))
+            dt = time.perf_counter() - t0
+            b = dt if b is None else min(b, dt)
+        return b * 1e3
+
+    carry = f.initial_carry()
+    tot = {"full": 0.0, "nocomm": 0.0, "assemble": 0.0}
+    print(f"{'seg':>4} {'steps':>9} {'ticks':>5} {'sigs':>4} {'rnds':>4} "
+          f"{'pats':>4} {'cov':>5} | {'full':>8} {'comm':>8} {'kern':>8} "
+          f"{'asm':>8}  (ms)")
+    for k, (fns, st) in enumerate(zip(f.segment_fns, f.segment_stats)):
+        ts = {mode: best(fns[mode], carry, x)
+              for mode in ("full", "nocomm", "assemble")}
+        for mode in tot:
+            tot[mode] += ts[mode]
+        lo, hi = st["steps"]
+        print(f"{k:>4} {f'{lo}-{hi}':>9} {st['ticks']:>5} {st['sigs']:>4} "
+              f"{st['rounds']:>4} {st['comm_patterns']:>4} "
+              f"{st['span_coverage']:>5.2f} | {ts['full']:>8.2f} "
+              f"{ts['full'] - ts['nocomm']:>8.2f} "
+              f"{ts['nocomm'] - ts['assemble']:>8.2f} "
+              f"{ts['assemble']:>8.2f}")
+        carry = jax.block_until_ready(fns["full"](carry, x))
+    print(f"totals: full {tot['full']:.2f} ms = "
+          f"comm {tot['full'] - tot['nocomm']:.2f} "
+          f"+ kernels {tot['nocomm'] - tot['assemble']:.2f} "
+          f"+ assembly {tot['assemble']:.2f}")
 
 
 if __name__ == "__main__":

@@ -40,6 +40,61 @@ identical tile tasks share one traced branch — see
 tracing per-transfer slicing.  Program size is bounded by the number of
 *distinct* task structures, not the task count; results stay bit-exact
 against the unrolled path and ``interpret_plan``.
+
+Five runtime fast paths close the segmented path's per-call gap to the
+unrolled executor (which does static slices and exact payloads):
+
+* **value-returning dispatch** — switch branches return ``(y_pad,
+  start)`` instead of threading the whole carry, and one outer
+  ``dynamic_update_slice`` lands the result: the scan body never copies
+  the register buffer through a conditional (on XLA:CPU a carry-threading
+  ``lax.switch`` copies the full buffer per tick).  Branches pad their
+  output to the segment's max width with a *self-restoring tail* (a
+  dynamic_slice of the columns the write is about to overwrite), so the
+  uniform-width write is exact;
+* **span-coalesced assembly** — fires per signature slot when
+  ``segment.coalesce_spans`` finds that the slot's gather rows are
+  piecewise contiguous across every occurrence (conv/pool row tiles, halo
+  pads resolved into contiguous sentinel *regions*, whole-register
+  reads): each piece of at least ``segment.MIN_SPAN`` elements becomes
+  one memcpy-width ``dynamic_slice`` from a per-occurrence starts table,
+  the scattered remainder shares one element gather, and only slots that
+  stay genuinely scattered (> ``segment.MAX_SPANS`` pieces or
+  < ``segment.MIN_COVERAGE`` coverage) keep the whole-slot element
+  gather;
+* **staged comm with a pattern switch** — ``build_segments`` groups each
+  delta's shipping ticks into payload-scale cohorts, pads each
+  :class:`~repro.codegen.plan.CommRound` only to its cohort max (not the
+  segment max) and elides fully-padded rounds at build time; the runtime
+  dispatches each tick through one switch over the segment's distinct
+  *active-round patterns*, whose branches execute exactly their fires
+  (no per-round idle conds) and land the concatenated payloads with one
+  ``dynamic_update_slice`` into the tick's contiguous block of staging
+  strips.  Consumers read delivered values straight out of the strips:
+  their gather tables are statically redirected at build time through a
+  per-worker ``home`` map, so no receive-side scatter or runtime
+  indexing exists at all;
+* **baked parameters** (``bake_params=True``, off by default) —
+  occurrences are grouped by (structure, parameter tile), so every
+  branch's weights are trace-time constants and hit the same prepacked
+  XLA:CPU kernels (e.g. the Eigen convolution) as the unrolled path's
+  closed-over params; program size stays bounded by the number of
+  distinct parameter *tiles* (not tasks — row/grid slices of one layer
+  share a tile).  Off by default because doubling the branch count
+  roughly doubles segmented trace time for no measured runtime win on
+  serialized 1-core hosts; enable it on real multi-core targets where
+  the native conv kernels can pay for the lowering.  The default
+  jit-operand parameter tables index per occurrence;
+* **single-structure segments** — when a segment has exactly one
+  signature and no idle (tick, worker) cells, every tick runs the same
+  branch, so the ``lax.switch`` and its operand plumbing are skipped and
+  the branch is called directly.
+
+``span_coalesce`` / ``cohort_rounds`` / ``bake_params`` toggle their fast
+path (ablation knobs; outputs are bit-identical in every combination),
+and ``profile=True`` exposes per-segment functions + static stats
+so runtime regressions are attributable per segment and per phase
+(assembly/kernel/comm — ``examples/schedule_sliced.py --profile``).
 """
 from __future__ import annotations
 
@@ -185,6 +240,10 @@ def build_mpmd_executor(
     coalesce: bool = True,
     segmented: bool = False,
     checkpoint: bool = False,
+    span_coalesce: bool = True,
+    cohort_rounds: bool = True,
+    bake_params: bool = False,
+    profile: bool = False,
 ) -> Callable[[jax.Array], jax.Array]:
     """Compile the plan into a jitted shard_map function ``f(x) -> y``.
 
@@ -215,7 +274,12 @@ def build_mpmd_executor(
     dispatches through per-segment kernel tables, and comm becomes ring
     rounds over padded index rows (``fuse_transfers`` does not apply).  The
     unrolled path remains the certification-literal fallback and the
-    equivalence oracle for the segmented one.
+    equivalence oracle for the segmented one.  ``span_coalesce`` /
+    ``cohort_rounds`` / ``bake_params`` (segmented only) are ablation
+    knobs for the span-assembly, cohort-round and constant-parameter fast
+    paths — outputs are bit-identical with them on or off; ``profile=True`` additionally exposes per-segment
+    jitted functions and static stats for the runtime breakdown
+    (``examples/schedule_sliced.py --profile``).
 
     ``checkpoint=True`` (segmented only) makes the executor additionally
     return its packed register carries at every segment boundary:
@@ -253,7 +317,9 @@ def build_mpmd_executor(
     if segmented:
         return _build_segmented(
             plan, model, params, mesh, axis, batch, liveness,
-            checkpoint=checkpoint,
+            checkpoint=checkpoint, span_coalesce=span_coalesce,
+            cohort_rounds=cohort_rounds, bake_params=bake_params,
+            profile=profile,
         )
 
     reg_names = [l.name for l in model.layers]
@@ -434,8 +500,11 @@ def executed_comm_bytes(
     fuse_transfers: bool = True,
     coalesce: bool = True,
     dtype_bytes: int = 4,
+    segmented: bool = False,
+    liveness: bool = True,
+    cohort_rounds: bool = True,
 ) -> float:
-    """Exact payload bytes the unrolled executor's collectives ship.
+    """Exact payload bytes the executors' collectives ship.
 
     Mirrors the comm lowering analytically: the per-node path ships one
     payload of the transfer's window per (node, window) group pair, so its
@@ -443,10 +512,37 @@ def executed_comm_bytes(
     producer-bytes — the byte-parity property the per-node window fix is
     tested against.  The fused path pads each round's payload to the
     round's largest pair, so it is an upper bound on the accounting.
+
+    ``segmented=True`` counts the segmented executor's cohort-sized ring
+    rounds instead (``fuse_transfers`` does not apply): only the *real*
+    (non-padding) entries of each active ``(tick, dst)`` index row — pad
+    entries gather from and scatter into the dump column, shipping no
+    register data — so the total is exactly ``plan.comm_bytes`` scaled by
+    ``batch * dtype_bytes`` / producer-bytes, whatever the cohort shapes.
     """
     if coalesce:
         plan = coalesce_transfer_steps(plan)
     sizes = {l.name: int(np.prod(l.out_shape)) for l in model.layers}
+    if segmented:
+        reg_shapes = {l.name: tuple(l.out_shape) for l in model.layers}
+        live = None
+        if liveness:
+            birth, death, _sets = plan_liveness(plan, model)
+            live = (birth, death)
+        offsets, total = pack_registers(
+            plan, {n: max(s, 1) for n, s in sizes.items()}, liveness=live
+        )
+        pad = total  # stand-in dump column; positions are in [0, total)
+        segments = build_segments(
+            plan, reg_shapes, offsets, pad_index=pad,
+            **({} if cohort_rounds else {"cohort_ratio": None}),
+        )
+        real = 0
+        for seg in segments:
+            for r in seg.rounds:
+                per_row = (np.asarray(r.rows) != pad).sum(axis=1)
+                real += int(per_row[np.asarray(r.slot)].sum())
+        return float(real) * batch * dtype_bytes
 
     def t_elems(t: Transfer) -> int:
         if t.box is None:
@@ -535,44 +631,113 @@ def _take_row(a: jax.Array, i: jax.Array) -> jax.Array:
     )
 
 
-def _make_branch(sig, tab, x, batch: int, gin_kinds, pidx_identity: bool):
-    """One switch branch: gather the signature's input blocks from the
-    packed buffer through the occurrence's index rows, run the shared
-    kernel with its operand params, scatter the output register back.
+def _make_branch(
+    sig, tab, x, batch: int, gin_kinds, pidx_identity: bool,
+    const_pops=None,
+    mode: str = "full", wseg: int = 1, idle_st: int = 0,
+):
+    """One switch branch: assemble the signature's input blocks from the
+    packed buffer through the occurrence's index tables, run the shared
+    kernel with its operand params, and return the output as a value.
 
-    Slots whose index rows are contiguous runs in every occurrence (whole
-    single-register reads — dense/identity/attention inputs) degrade to one
-    ``dynamic_slice`` from a starts table instead of an element gather;
+    Branches read the carry but do **not** return it: a ``lax.switch``
+    whose branches thread the full carry lowers to nested conditionals
+    that each copy the buffer (ruinously expensive on a wide carry), so
+    every branch instead returns a small ``(y_pad, start)`` pair and the
+    caller performs one in-place ``dynamic_update_slice`` outside the
+    switch.  ``y_pad`` is the kernel output padded to the segment-wide
+    width ``wseg`` with a *self-restoring tail* — the current buffer
+    contents at ``[start + w, start + wseg)`` — so the uniform-width
+    write never corrupts neighbouring columns.
+
+    Per-slot assembly is span-coalesced (``gin_kinds[j] == ("spans", lens,
+    kinds)``): each contiguous piece of the slot's gather rows is one
+    memcpy-width ``dynamic_slice`` from a per-occurrence starts table, the
+    genuinely scattered remainder (if any) is served by a single element
+    gather cut up with static slices, and the pieces concatenate in row
+    order.  Slots whose rows stay scattered past the coalescing thresholds
+    (``gin_kinds[j] == "rows"``) fall back to one whole-slot element gather.
     ``pidx_identity`` elides the parameter-dedup indirection when every
-    occurrence carries distinct parameters anyway."""
+    occurrence carries distinct parameters anyway.
+
+    ``mode="assemble"`` (profiling only) stops after input assembly and
+    folds a sum of the gathered blocks into the idle column (so the
+    compiler cannot elide the gathers) — isolating assembly cost from
+    kernel + comm in the per-segment runtime breakdown."""
     from repro.codegen.segment import make_kernel
 
     kern = make_kernel(sig)
     slot_shapes = sig[1]
 
-    def branch(buf: jax.Array, oc) -> jax.Array:
+    def branch(buf: jax.Array, oc):
         ins = []
         for j, shp in enumerate(slot_shapes):
-            sz = int(np.prod(shp)) if shp else 1
-            if gin_kinds[j] == "slice":
-                off = _take_row(tab["gin"][j], oc)
-                # primitive bind skips traced-start canonicalization ufuncs;
-                # offsets are non-negative by construction
-                flat = jax.lax.dynamic_slice_p.bind(
-                    buf, np.int32(0), off, slice_sizes=(batch, sz)
-                )
-            else:
+            kind = gin_kinds[j]
+            if kind == "rows":
                 flat = _gather_cols(buf, _take_row(tab["gin"][j], oc))
+            else:
+                _tag, lens, kinds = kind
+                g = tab["gin"][j]
+                starts = (
+                    _take_row(g["starts"], oc) if "starts" in g else None
+                )
+                rem = (
+                    _gather_cols(buf, _take_row(g["rem"], oc))
+                    if "rem" in g else None
+                )
+                pieces = []
+                si = ri = 0
+                for ln, k in zip(lens, kinds):
+                    if k == "span":
+                        st = jax.lax.index_in_dim(starts, si, 0, False)
+                        si += 1
+                        # primitive bind skips traced-start canonicalization
+                        # ufuncs; starts are non-negative by construction
+                        pieces.append(jax.lax.dynamic_slice_p.bind(
+                            buf, np.int32(0), st, slice_sizes=(batch, ln)
+                        ))
+                    else:
+                        pieces.append(
+                            jax.lax.slice(rem, (0, ri), (batch, ri + ln))
+                        )
+                        ri += ln
+                flat = (
+                    pieces[0] if len(pieces) == 1
+                    else jax.lax.concatenate(pieces, 1)
+                )
             ins.append(jax.lax.reshape(flat, (batch, *shp)))
+        if mode == "assemble":
+            s = jnp.float32(0)
+            for blk in ins:
+                s = s + jnp.sum(blk)
+            y_pad = jnp.broadcast_to(s, (batch, 1)).astype(jnp.float32)
+            if wseg > 1:
+                y_pad = jax.lax.concatenate([
+                    y_pad,
+                    jax.lax.slice(
+                        buf, (0, idle_st + 1), (batch, idle_st + wseg)
+                    ),
+                ], 1)
+            return y_pad, jnp.asarray(idle_st, jnp.int32)
         pops = ()
-        if "p" in tab:
+        if const_pops is not None:
+            pops = [jnp.asarray(p) for p in const_pops]
+        elif "p" in tab:
             pi = oc if pidx_identity else _take_row(tab["pidx"], oc)
             pops = [_take_row(p, pi) for p in tab["p"]]
         y = kern(x, ins, pops).astype(jnp.float32)
-        y2 = jax.lax.reshape(y, (batch, int(np.prod(y.shape)) // batch))
-        return jax.lax.dynamic_update_slice_p.bind(
-            buf, y2, np.int32(0), _take_row(tab["out"], oc)
-        )
+        w = int(np.prod(y.shape)) // batch
+        y2 = jax.lax.reshape(y, (batch, w))
+        st = _take_row(tab["out"], oc)
+        if w < wseg:
+            # self-restoring tail: read back what the uniform-width write
+            # is about to overwrite, so the pad columns keep their values
+            tail = jax.lax.dynamic_slice_p.bind(
+                buf, np.int32(0), jax.lax.add(st, np.int32(w)),
+                slice_sizes=(batch, wseg - w),
+            )
+            y2 = jax.lax.concatenate([y2, tail], 1)
+        return y2, st
 
     return branch
 
@@ -586,6 +751,10 @@ def _build_segmented(
     batch: int,
     liveness: bool,
     checkpoint: bool = False,
+    span_coalesce: bool = True,
+    cohort_rounds: bool = True,
+    bake_params: bool = False,
+    profile: bool = False,
 ) -> Callable[[jax.Array], jax.Array]:
     """Segmented lax.scan lowering of a (coalesced) plan.
 
@@ -593,17 +762,28 @@ def _build_segmented(
     supplies the packed register layout and the per-segment tick/round
     schema; this builder adds the model-side compute tables — per-segment
     kernel lists keyed by structural signature, with per-occurrence operand
-    tables (register offsets, deduplicated parameter slices) — and emits
-    one scan per segment.  All tables are passed as jit arguments rather
-    than baked as constants, so tracing cost stays bounded by the number of
-    distinct signatures.
+    tables (register offsets, span starts, deduplicated parameter slices) —
+    and emits one scan per segment.  All tables are passed as jit arguments
+    rather than baked as constants, so tracing cost stays bounded by the
+    number of distinct signatures.
+
+    ``span_coalesce=False`` keeps only the whole-slot-contiguous fast path
+    (everything else element-gathers — the pre-span layout);
+    ``cohort_rounds=False`` pads every ring round to the segment max (the
+    pre-cohort layout).  Both are ablation/debug knobs: outputs are
+    bit-identical across them.  ``profile=True`` additionally exposes
+    ``.segment_fns`` (per-segment jitted callables over the stacked carry,
+    in ``full`` / ``nocomm`` / ``assemble`` modes) and ``.segment_stats``
+    (static span/round tables) for the per-segment runtime breakdown.
     """
     from repro.codegen.segment import (
-        NEGINF_PAD,
-        ZERO_PAD,
+        SpanTable,
+        coalesce_spans,
+        max_sentinel_runs,
         node_gather_rows,
         node_signature,
         param_slices,
+        resolve_rows,
     )
 
     m = plan.n_workers
@@ -611,25 +791,103 @@ def _build_segmented(
     reg_sizes = {
         n: (int(np.prod(s)) if s else 1) for n, s in reg_shapes.items()
     }
-    live = None
-    if liveness:
-        birth, death, _sets = plan_liveness(plan, model)
-        live = (birth, death)
+    birth, death, _sets = plan_liveness(plan, model)
+    live = (birth, death) if liveness else None
     offsets, total = pack_registers(plan, reg_sizes, liveness=live)
-    # three pristine columns follow the registers: ``total`` holds 0.0
-    # (virtualized conv/avgpool halo pads), ``total + 1`` holds -inf
-    # (maxpool halo pads), ``total + 2`` is the dump column comm padding
-    # gathers from and scatters into — so every index is in bounds and
-    # padding can never touch a real register
-    zero_col, neginf_col, dump_col = total, total + 1, total + 2
-    width = total + 3
-    segments = build_segments(plan, reg_shapes, offsets, pad_index=dump_col)
 
-    def resolve(row: np.ndarray) -> np.ndarray:
-        return np.where(
-            row == ZERO_PAD, zero_col,
-            np.where(row == NEGINF_PAD, neginf_col, row),
-        ).astype(np.int32)
+    # raw gather rows once per node; the longest sentinel *runs* size the
+    # sentinel regions so every halo-pad run can resolve to a contiguous
+    # ascending range and join a span (see segment.resolve_rows)
+    raw_rows: Dict[str, List[np.ndarray]] = {}
+    zrun = nrun = 1
+    for step in plan.steps:
+        for seg_nodes in step.compute:
+            for node in seg_nodes:
+                if node in raw_rows:
+                    continue
+                rws = node_gather_rows(model, node, offsets)
+                raw_rows[node] = rws
+                for r in rws:
+                    z, nf = max_sentinel_runs(r)
+                    zrun, nrun = max(zrun, z), max(nrun, nf)
+    # pristine sentinel regions follow the registers: ``[total, total+zrun)``
+    # holds 0.0 (virtualized conv/avgpool halo pads), the next ``nrun``
+    # columns hold -inf (maxpool halo pads), and the final column is the
+    # dump column comm padding gathers from and scatters into — so every
+    # index is in bounds and padding can never touch a real register
+    zero_base = total
+    neginf_base = total + zrun
+    dump_col = total + zrun + nrun
+    segments = build_segments(
+        plan, reg_shapes, offsets, pad_index=dump_col,
+        **({} if cohort_rounds else {"cohort_ratio": None}),
+    )
+
+    # staging layout: every comm round lands its payload in a private
+    # staging strip via an in-place dynamic_update_slice instead of an
+    # element scatter (scatter costs scale per element on CPU; an
+    # in-place DUS is a memcpy).  Each *fire* of a round gets its own
+    # strip — delivered values are never clobbered by a later fire — and
+    # strips are allocated tick-major, so one tick's fires form a single
+    # contiguous block: the runtime ships a whole tick's rounds through
+    # one **pattern switch** (one branch per distinct active-round set,
+    # executing exactly its fires, no per-round idle conds) and lands the
+    # concatenated payload with one DUS at the tick's block base.
+    # Consumers of delivered values read the strips directly: the
+    # per-occurrence gather tables are statically redirected through a
+    # per-worker "home" map maintained by the build-time schedule walk
+    # below, so no runtime receive-side indexing exists at all.
+    seg_acts = []
+    seg_soffs = []
+    seg_bases = []
+    seg_patterns = []
+    seg_patids = []
+    stage_off = dump_col + 1
+    tail_need = 0
+    for seg in segments:
+        n_ticks = len(seg.ticks)
+        act_np = (
+            np.stack(
+                [(np.asarray(r.slot) != 0).any(axis=1) for r in seg.rounds],
+                axis=1,
+            )
+            if seg.rounds else np.zeros((n_ticks, 0), bool)
+        )  # (n_ticks, n_rounds)
+        soff = np.zeros((n_ticks, len(seg.rounds)), np.int32)
+        base = np.zeros(n_ticks, np.int32)
+        patterns: List[Tuple[int, ...]] = []
+        pat_index: Dict[Tuple[int, ...], int] = {}
+        pat_ids = np.zeros(n_ticks, np.int32)
+        for t in range(n_ticks):
+            base[t] = stage_off
+            key = tuple(np.nonzero(act_np[t])[0].tolist())
+            pid = pat_index.setdefault(key, len(pat_index))
+            if pid == len(patterns):
+                patterns.append(key)
+            pat_ids[t] = pid
+            for r_i in key:
+                soff[t, r_i] = stage_off
+                stage_off += seg.rounds[r_i].length
+        lmax = max(
+            [0] + [sum(seg.rounds[r].length for r in p) for p in patterns]
+        )
+        # idle-pattern tails read/write ``lmax`` columns past their tick's
+        # block base — make sure that stays in bounds for trailing ticks
+        tail_need = max(tail_need, (int(base.max()) + lmax) if n_ticks else 0)
+        seg_acts.append(act_np)
+        seg_soffs.append(soff)
+        seg_bases.append(base)
+        seg_patterns.append(tuple(patterns))
+        seg_patids.append(pat_ids)
+    # the uniform-width output write needs `start + wseg <= width` for
+    # every output offset (starts never exceed `total`)
+    wmax = max(
+        [1] + [
+            reg_sizes[n]
+            for seg in segments for row in seg.ticks for n in row if n
+        ]
+    )
+    width = max(stage_off, total + wmax, tail_need)
 
     sig_cache: Dict[str, Tuple] = {}
 
@@ -638,10 +896,46 @@ def _build_segmented(
             sig_cache[node] = node_signature(model, node)
         return sig_cache[node]
 
-    seg_meta = []     # per segment: (sig_list, sig_infos, deltas)
+    # per-worker "home" map: where each packed register column's current
+    # value actually lives (its own column, or a staging strip column when
+    # the value arrived via a comm round and has not been recomputed
+    # since).  The walk below mirrors the runtime tick order exactly —
+    # compute first, then rounds — so every gather table is redirected
+    # through the home state its tick will observe.
+    ident = np.arange(total, dtype=np.int32)
+    home = np.tile(ident, (m, 1))
+    owner = np.full((m, total), -1, np.int64)    # node id of last delivery
+    pos2node = np.full(total, -1, np.int64)      # current producer per col
+    node_ids: Dict[str, int] = {}
+    node_death: List[int] = []
+
+    def nid_of(node: str) -> int:
+        i = node_ids.get(node)
+        if i is None:
+            i = node_ids[node] = len(node_death)
+            node_death.append(death.get(node, len(plan.steps)))
+        return i
+
+    def redirect(w: int, rws: List[np.ndarray]) -> List[np.ndarray]:
+        out = []
+        for rr in rws:
+            a = np.asarray(rr, np.int32).copy()
+            msk = a >= 0
+            a[msk] = home[w, a[msk]]
+            out.append(a)
+        return out
+
+    seg_meta = []     # (sig_list, sig_infos, deltas, lengths, single,
+                      #  patterns, lmax, wseg, idle_st)
     seg_tables = []   # per segment: pytree of jnp operand tables (jit args)
-    for seg in segments:
+    seg_stats = []    # per segment: static span/round statistics
+    for seg_i, seg in enumerate(segments):
         n_ticks = len(seg.ticks)
+        act_np = seg_acts[seg_i]
+        soff = seg_soffs[seg_i]
+        patterns = seg_patterns[seg_i]
+        round_rows = [np.asarray(r.rows) for r in seg.rounds]
+        round_slots = [np.asarray(r.slot) for r in seg.rounds]
         sig_list: List = []
         sig_index: Dict = {}
         occs: List[Dict] = []
@@ -652,14 +946,15 @@ def _build_segmented(
                 if node is None:
                     continue
                 sig, pkey = sig_of(node)
-                sid = sig_index.get(sig)
+                key = (sig, pkey) if bake_params else sig
+                sid = sig_index.get(key)
                 if sid is None:
-                    sid = sig_index[sig] = len(sig_list)
+                    sid = sig_index[key] = len(sig_list)
                     sig_list.append(sig)
                     occs.append({"gin": [], "out": [], "pidx": [],
                                  "uniq": {}, "parrs": []})
                 o = occs[sid]
-                o["gin"].append(node_gather_rows(model, node, offsets))
+                o["gin"].append(redirect(w, raw_rows[node]))
                 o["out"].append(offsets[node])
                 if pkey is not None:
                     pi = o["uniq"].get(pkey)
@@ -669,20 +964,64 @@ def _build_segmented(
                     o["pidx"].append(pi)
                 sig_tab[t, w] = sid + 1  # 0 is the idle branch
                 occ_tab[t, w] = len(o["out"]) - 1
+                off_n, sz_n = offsets[node], reg_sizes[node]
+                home[w, off_n:off_n + sz_n] = ident[off_n:off_n + sz_n]
+                pos2node[off_n:off_n + sz_n] = nid_of(node)
+            for r_i, r in enumerate(seg.rounds):
+                if not act_np[t, r_i]:
+                    continue
+                strip = soff[t, r_i]
+                for w in range(m):
+                    rw = round_rows[r_i][round_slots[r_i][t, w]]
+                    real = np.nonzero(rw != dump_col)[0]
+                    if not real.size:
+                        continue
+                    cols = rw[real]
+                    s = (w - r.delta) % m
+                    if not (home[s, cols] == cols).all():
+                        raise NotImplementedError(
+                            "staged comm: sender would forward a value it "
+                            "received rather than produced"
+                        )
+                    home[w, cols] = strip + real.astype(np.int32)
+                    owner[w, cols] = pos2node[cols]
         sig_tabs = []
         sig_infos = []
+        span_elems = gather_elems = 0
         for sig, o in zip(sig_list, occs):
             n_slots = len(sig[1])
             gin = []
             gin_kinds = []
             for j in range(n_slots):
-                rows = resolve(np.stack([r[j] for r in o["gin"]]))
-                runs = rows[:, :1] + np.arange(rows.shape[1], dtype=np.int32)
-                if rows.shape[1] and (rows == runs).all():
-                    # contiguous in every occurrence: one dynamic_slice from
-                    # a starts table instead of an element gather
-                    gin.append(jnp.asarray(rows[:, 0]))
-                    gin_kinds.append("slice")
+                rows = resolve_rows(
+                    np.stack([r[j] for r in o["gin"]]),
+                    zero_base, neginf_base,
+                )
+                span = None
+                if rows.shape[1]:
+                    if span_coalesce:
+                        span = coalesce_spans(rows)
+                    else:
+                        # pre-span fast path: only whole-slot-contiguous
+                        # rows become a (single-span) dynamic_slice
+                        runs = rows[:, :1] + np.arange(
+                            rows.shape[1], dtype=np.int32
+                        )
+                        if (rows == runs).all():
+                            span = SpanTable(
+                                lens=(rows.shape[1],), kinds=("span",),
+                                starts=rows[:, :1].copy(),
+                                rem=np.zeros((rows.shape[0], 0), np.int32),
+                                coverage=1.0,
+                            )
+                gather_elems += rows.size
+                if span is not None:
+                    span_elems += int(round(span.coverage * rows.size))
+                    g = {"starts": jnp.asarray(span.starts)}
+                    if span.rem.size:
+                        g["rem"] = jnp.asarray(span.rem)
+                    gin.append(g)
+                    gin_kinds.append(("spans", span.lens, span.kinds))
                 else:
                     gin.append(jnp.asarray(rows))
                     gin_kinds.append("rows")
@@ -691,69 +1030,179 @@ def _build_segmented(
                 "out": jnp.asarray(np.asarray(o["out"], np.int32)),
             }
             pidx_identity = True
+            const_pops = None
             if o["parrs"]:
-                pidx = np.asarray(o["pidx"], np.int32)
-                pidx_identity = bool((pidx == np.arange(len(pidx))).all())
-                if not pidx_identity:
-                    tab["pidx"] = jnp.asarray(pidx)
-                tab["p"] = tuple(
-                    jnp.asarray(np.stack([pa[j] for pa in o["parrs"]]))
-                    for j in range(len(o["parrs"][0]))
-                )
+                if bake_params and len(o["parrs"]) == 1:
+                    # one parameter tile serves every occurrence (the
+                    # bake_params branch split guarantees this): bake it as
+                    # a trace-time constant so XLA prepacks/fuses the weights
+                    # the way the unrolled path's closed-over params do,
+                    # instead of tracing a dynamic-operand kernel
+                    const_pops = tuple(o["parrs"][0])
+                else:
+                    pidx = np.asarray(o["pidx"], np.int32)
+                    pidx_identity = bool(
+                        (pidx == np.arange(len(pidx))).all()
+                    )
+                    if not pidx_identity:
+                        tab["pidx"] = jnp.asarray(pidx)
+                    tab["p"] = tuple(
+                        jnp.asarray(np.stack([pa[j] for pa in o["parrs"]]))
+                        for j in range(len(o["parrs"][0]))
+                    )
             sig_tabs.append(tab)
-            sig_infos.append((tuple(gin_kinds), pidx_identity))
-        xs = {
-            "sig": jnp.asarray(sig_tab),
-            "occ": jnp.asarray(occ_tab),
-        }
+            sig_infos.append((tuple(gin_kinds), pidx_identity, const_pops))
+        # single-structure specialization: one signature and no idle cells
+        # means every tick runs the same branch — skip the lax.switch and
+        # its operand plumbing entirely
+        single = len(sig_list) == 1 and bool((sig_tab != 0).all())
+        lmax = max(
+            [0] + [
+                sum(seg.rounds[r].length for r in pat) for pat in patterns
+            ]
+        )
+        wseg = max(
+            [1] + [reg_sizes[n] for row in seg.ticks for n in row if n]
+        )
+        idle_st = width - wseg
+        xs = {"occ": jnp.asarray(occ_tab)}
+        if not single:
+            xs["sig"] = jnp.asarray(sig_tab)
         if seg.rounds:
             xs["slot"] = jnp.asarray(
                 np.stack([r.slot for r in seg.rounds], axis=1)
             )  # (n_ticks, n_rounds, m)
-            # per (tick, round) activity: rounds fire under lax.cond, so the
-            # many compute-only ticks skip their collectives entirely (the
-            # flag is tick data, identical on every worker — all workers
-            # take the same branch)
-            xs["act"] = jnp.asarray(np.stack(
-                [(r.slot != 0).any(axis=1) for r in seg.rounds], axis=1
-            ).astype(np.int32))  # (n_ticks, n_rounds)
-        seg_meta.append(
-            (sig_list, sig_infos, tuple(r.delta for r in seg.rounds))
-        )
+            # per-tick staging block base + active-round pattern id: the
+            # comm pattern switch dispatches on the id (tick data,
+            # identical on every worker — all workers take the same
+            # branch, so each branch's collectives stay matched)
+            xs["base"] = jnp.asarray(seg_bases[seg_i])
+            if len(patterns) > 1:
+                xs["pat"] = jnp.asarray(seg_patids[seg_i])
+        # barrier materialization (checkpoint runs only): copy every
+        # staged delivery back to its packed column, so snapshots stay
+        # bit-equivalent to the reference runner's barrier state (which
+        # writes deliveries straight into the register file, live or not)
+        # and fault-time replan/resume (migrate_registers) sees a
+        # canonical register file
+        mat = None
+        if checkpoint:
+            pairs = []
+            for w in range(m):
+                moved = np.nonzero(home[w] != ident)[0]
+                keep = sorted(p for p in moved if owner[w, p] >= 0)
+                pairs.append([(home[w, p], p) for p in keep])
+            k_max = max(len(p) for p in pairs)
+            if k_max:
+                src = np.full((m, k_max), dump_col, np.int32)
+                dst = np.full((m, k_max), dump_col, np.int32)
+                for w, pr in enumerate(pairs):
+                    for j, (s_c, d_c) in enumerate(pr):
+                        src[w, j] = s_c
+                        dst[w, j] = d_c
+                mat = (jnp.asarray(src), jnp.asarray(dst))
+        seg_meta.append((
+            sig_list, sig_infos, tuple(r.delta for r in seg.rounds),
+            tuple(r.length for r in seg.rounds), single, patterns,
+            lmax, wseg, idle_st,
+        ))
         seg_tables.append({
             "xs": xs,
             "sigs": sig_tabs,
             "rows": tuple(jnp.asarray(r.rows) for r in seg.rounds),
+            **({"mat": mat} if mat is not None else {}),
+        })
+        real_elems = shipped_elems = 0
+        for r_i, r in enumerate(seg.rounds):
+            per_row = (np.asarray(r.rows) != dump_col).sum(axis=1)
+            real_elems += int(per_row[np.asarray(r.slot)].sum())
+            shipped_elems += int(act_np[:, r_i].sum()) * r.length * m
+        seg_stats.append({
+            "steps": (seg.start, seg.stop),
+            "ticks": n_ticks,
+            "sigs": len(sig_list),
+            "single_structure": single,
+            "rounds": len(seg.rounds),
+            "round_lengths": [r.length for r in seg.rounds],
+            "round_fires": int(act_np.sum()),
+            "comm_patterns": len(patterns),
+            "comm_real_elems": real_elems,
+            "comm_shipped_elems": shipped_elems,
+            "stage_elems": int(sum(
+                int(act_np[:, r_i].sum()) * r.length
+                for r_i, r in enumerate(seg.rounds)
+            )),
+            "span_elems": span_elems,
+            "gather_elems": gather_elems,
+            "span_coverage": (
+                span_elems / gather_elems if gather_elems else 1.0
+            ),
         })
 
     sink_off = offsets[plan.sink]
     sink_sz = reg_sizes[plan.sink]
     sink_shape = reg_shapes[plan.sink]
 
-    def worker_fn(x: jax.Array, tables):
-        wid = jax.lax.axis_index(axis)
-        buf = jnp.zeros((batch, width), jnp.float32)
-        buf = jax.lax.dynamic_update_slice(
-            buf, jnp.full((batch, 1), -jnp.inf), (0, neginf_col)
-        )
-        snaps: List[jax.Array] = []
-        for (sig_list, sig_infos, deltas), tabs in zip(seg_meta, tables):
-            branches = [lambda b, oc: b]  # 0: idle worker this tick
-            for sig, info, st in zip(sig_list, sig_infos, tabs["sigs"]):
-                branches.append(_make_branch(sig, st, x, batch, *info))
-            rows = tabs["rows"]
+    def run_segment(buf, x, meta, tabs, mode="full"):
+        """Scan one segment's ticks over the packed carry.
 
-            def body(b, tk, branches=branches, deltas=deltas, rows=rows):
-                b = jax.lax.switch(
-                    _take_row(tk["sig"], wid), branches, b,
-                    _take_row(tk["occ"], wid),
+        Every per-tick write is an in-place ``dynamic_update_slice``: the
+        switch returns ``(y_pad, start)`` values (see ``_make_branch``)
+        and the comm **pattern switch** returns the tick's concatenated
+        round payloads, landed as one block at the tick's staging base.
+        The carry is never threaded through a conditional, so the scan
+        body is free of buffer copies, element scatters, and per-round
+        idle conds.
+
+        ``mode``: ``"full"`` (compute + comm), ``"nocomm"`` (rounds
+        skipped), ``"assemble"`` (input assembly only — profiling)."""
+        wid = jax.lax.axis_index(axis)
+        (sig_list, sig_infos, deltas, lengths, single, patterns,
+         lmax, wseg, idle_st) = meta
+        br_mode = "assemble" if mode == "assemble" else "full"
+
+        def idle(b, oc):
+            # self-restoring no-op: read wseg columns, write them back
+            return (
+                jax.lax.slice(b, (0, idle_st), (batch, idle_st + wseg)),
+                jnp.asarray(idle_st, jnp.int32),
+            )
+
+        branches = [idle]
+        for sig, info, st in zip(sig_list, sig_infos, tabs["sigs"]):
+            branches.append(_make_branch(
+                sig, st, x, batch, *info, mode=br_mode,
+                wseg=wseg, idle_st=idle_st,
+            ))
+        rows = tabs["rows"]
+        comm = mode == "full"
+
+        def body(b, tk):
+            oc = _take_row(tk["occ"], wid)
+            if single:
+                y, st = branches[1](b, oc)
+            else:
+                y, st = jax.lax.switch(
+                    _take_row(tk["sig"], wid), branches, b, oc
                 )
-                for r, delta in enumerate(deltas):
-                    # one static ring round: worker w ships to w + delta;
-                    # the source gathers the row of its *destination* (the
-                    # row describes what the destination receives, and a
-                    # register's offset is the same on every worker)
-                    def round_(b, r=r, delta=delta, tk=tk):
+            b = jax.lax.dynamic_update_slice_p.bind(b, y, np.int32(0), st)
+            if not comm or not deltas:
+                return b, None
+
+            # comm pattern switch: each branch executes exactly the ring
+            # rounds active on its ticks — worker w ships to w + delta,
+            # the source gathers the row of its *destination* (the row
+            # describes what the destination receives, and a register's
+            # offset is the same on every worker) — and concatenates the
+            # payloads in round order, padding to the segment's widest
+            # tick block with a self-restoring tail.  One DUS lands the
+            # whole block at the tick's staging base; ticks with no
+            # active round reduce to a read-back of their base columns.
+            def mk_pat(pat, b=b, tk=tk):
+                def branch():
+                    mvs = []
+                    for r in pat:
+                        delta = deltas[r]
                         slot_row = jax.lax.index_in_dim(
                             tk["slot"], r, 0, False
                         )
@@ -761,22 +1210,55 @@ def _build_segmented(
                             jax.lax.add(wid, np.int32(delta)), np.int32(m)
                         )
                         send = _take_row(rows[r], _take_row(slot_row, dst))
-                        recv = _take_row(rows[r], _take_row(slot_row, wid))
-                        moved = jax.lax.ppermute(
+                        mvs.append(jax.lax.ppermute(
                             _gather_cols(b, send, sorted_=True), axis,
                             [(i, (i + delta) % m) for i in range(m)],
-                        )
-                        return _scatter_cols(b, recv, moved)
+                        ))
+                    lp = sum(lengths[r] for r in pat)
+                    if lp < lmax:
+                        mvs.append(jax.lax.dynamic_slice_p.bind(
+                            b, np.int32(0),
+                            jax.lax.add(tk["base"], np.int32(lp)),
+                            slice_sizes=(batch, lmax - lp),
+                        ))
+                    if len(mvs) == 1:
+                        return mvs[0]
+                    return jax.lax.concatenate(mvs, 1)
+                return branch
 
-                    act = jax.lax.index_in_dim(tk["act"], r, 0, False)
-                    b = jax.lax.cond(
-                        jax.lax.gt(act, np.int32(0)),
-                        round_, lambda b: b, b,
-                    )
-                return b, None
+            if len(patterns) == 1:
+                mv = mk_pat(patterns[0])()
+            else:
+                mv = jax.lax.switch(
+                    tk["pat"], [mk_pat(p) for p in patterns]
+                )
+            b = jax.lax.dynamic_update_slice_p.bind(
+                b, mv, np.int32(0), tk["base"]
+            )
+            return b, None
 
-            buf, _ = jax.lax.scan(body, buf, tabs["xs"])
+        buf, _ = jax.lax.scan(body, buf, tabs["xs"])
+        return buf
+
+    def init_buf() -> jax.Array:
+        buf = jnp.zeros((batch, width), jnp.float32)
+        return jax.lax.dynamic_update_slice(
+            buf, jnp.full((batch, nrun), -jnp.inf), (0, neginf_base)
+        )
+
+    def worker_fn(x: jax.Array, tables):
+        wid = jax.lax.axis_index(axis)
+        buf = init_buf()
+        snaps: List[jax.Array] = []
+        for meta, tabs in zip(seg_meta, tables):
+            buf = run_segment(buf, x, meta, tabs)
             if checkpoint:
+                if "mat" in tabs:
+                    src, dst = tabs["mat"]
+                    buf = _scatter_cols(
+                        buf, _take_row(dst, wid),
+                        _gather_cols(buf, _take_row(src, wid)),
+                    )
                 snaps.append(buf)
         out = jax.lax.reshape(
             jax.lax.slice(
@@ -807,4 +1289,30 @@ def _build_segmented(
     )
     wrapped.width = width
     wrapped.segment_spans = tuple((s.start, s.stop) for s in segments)
+    wrapped.segment_stats = seg_stats
+
+    if profile:
+        p_ax = jax.sharding.PartitionSpec(axis)
+
+        def make_seg_fn(k: int, mode: str):
+            def seg_worker(bufs, x, tabs):
+                b = jax.lax.squeeze(bufs, (0,))
+                b = run_segment(b, x, seg_meta[k], tabs, mode=mode)
+                return jax.lax.expand_dims(b, (0,))
+
+            f = jax.jit(_shard_map(
+                seg_worker, mesh=mesh,
+                in_specs=(p_ax, p_rep, p_rep), out_specs=p_ax,
+            ))
+            tabs_k = seg_tables[k]
+            return lambda bufs, x, _f=f, _t=tabs_k: _f(bufs, x, _t)
+
+        wrapped.segment_fns = [
+            {mode: make_seg_fn(k, mode)
+             for mode in ("full", "nocomm", "assemble")}
+            for k in range(len(segments))
+        ]
+        wrapped.initial_carry = lambda: jnp.broadcast_to(
+            init_buf(), (m, batch, width)
+        )
     return wrapped

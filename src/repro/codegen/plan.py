@@ -777,6 +777,7 @@ def build_segments(
     offsets: Mapping[str, int],
     pad_index: int,
     split_ratio: float = 16.0,
+    cohort_ratio: Optional[float] = 4.0,
 ) -> List[PlanSegment]:
     """Canonicalize ``plan`` into uniformly-shaped :class:`PlanSegment`\\ s.
 
@@ -788,6 +789,18 @@ def build_segments(
     compute signatures once more.  Within a segment every tick executes the
     same static program (one switch dispatch + the segment's ring rounds);
     all per-tick variation lives in the index/descriptor tables.
+
+    Ring rounds are sized per **tick cohort**, not per segment: for each
+    ring delta, the ticks that actually ship bytes are grouped into cohorts
+    whose largest and smallest per-destination payloads differ by at most
+    ``cohort_ratio``, and each cohort becomes its own :class:`CommRound`
+    padded only to the *cohort* max (``cohort_ratio=None`` restores one
+    segment-max round per delta — the pre-cohort layout, kept as an
+    ablation/debug knob).  Rounds that would ship nothing anywhere — fully
+    padded, e.g. every payload of a delta empty — are elided here at build
+    time instead of surviving as runtime ``lax.cond``-skipped rounds:
+    every emitted round has ``length >= 1`` and at least one active
+    ``(tick, dst)`` cell.
     """
     m = plan.n_workers
     per_step = []
@@ -832,32 +845,60 @@ def build_segments(
         deltas = sorted({d for (_t, rnds) in comm_at for d in rnds})
         rounds: List[CommRound] = []
         for delta in deltas:
-            length = max(
-                len(p)
-                for (_t, rnds) in comm_at
-                for p in rnds.get(delta, {}).values()
-            )
-            pad_row = np.full((length,), pad_index, dtype=np.int32)
-            rows: List[np.ndarray] = [pad_row]
-            row_ids: Dict[bytes, int] = {pad_row.tobytes(): 0}
-            slot = np.zeros((n_ticks, m), dtype=np.int32)
+            # shipping ticks only, empty payloads dropped: a (tick, dst)
+            # with nothing to ship must become an inactive slot-0 cell, and
+            # a delta whose payloads are all empty must not emit a round
+            ship = []
             for (t, rnds) in comm_at:
-                for dst, pos in rnds.get(delta, {}).items():
-                    row = np.full((length,), pad_index, dtype=np.int32)
-                    row[: len(pos)] = pos.astype(np.int32)
-                    # source gather and destination scatter consume the same
-                    # row, so any lane order is sound — sort it (pad_index is
-                    # the maximum, so padding lands at the tail) to let the
-                    # executor mark its gathers/scatters indices_are_sorted
-                    row = np.sort(row)
-                    rid = row_ids.setdefault(row.tobytes(), len(rows))
-                    if rid == len(rows):
-                        rows.append(row)
-                    slot[t, dst] = rid
-            rounds.append(CommRound(
-                delta=delta, length=length,
-                rows=np.stack(rows), slot=slot,
-            ))
+                dsts = {
+                    w: p for w, p in rnds.get(delta, {}).items() if len(p)
+                }
+                if dsts:
+                    ship.append((t, dsts))
+            if not ship:
+                continue  # all-sentinel round: elided at build time
+            # cohorts of ticks with similar payload scale, each padded to
+            # its own max — ascending, so a cohort's spread is bounded by
+            # its first (smallest) member
+            ship.sort(key=lambda td: max(len(p) for p in td[1].values()))
+            cohorts: List[List] = []
+            floor = 0
+            for t, dsts in ship:
+                sc = max(len(p) for p in dsts.values())
+                if cohort_ratio is not None and (
+                    not cohorts or sc > cohort_ratio * floor
+                ):
+                    cohorts.append([])
+                    floor = sc
+                elif not cohorts:
+                    cohorts.append([])
+                cohorts[-1].append((t, dsts))
+            for members in cohorts:
+                length = max(
+                    len(p) for (_t, dsts) in members for p in dsts.values()
+                )
+                pad_row = np.full((length,), pad_index, dtype=np.int32)
+                rows: List[np.ndarray] = [pad_row]
+                row_ids: Dict[bytes, int] = {pad_row.tobytes(): 0}
+                slot = np.zeros((n_ticks, m), dtype=np.int32)
+                for (t, dsts) in members:
+                    for dst, pos in dsts.items():
+                        row = np.full((length,), pad_index, dtype=np.int32)
+                        row[: len(pos)] = pos.astype(np.int32)
+                        # source gather and destination scatter consume the
+                        # same row, so any lane order is sound — sort it
+                        # (pad_index is the maximum, so padding lands at the
+                        # tail) to let the executor mark its gathers/scatters
+                        # indices_are_sorted
+                        row = np.sort(row)
+                        rid = row_ids.setdefault(row.tobytes(), len(rows))
+                        if rid == len(rows):
+                            rows.append(row)
+                        slot[t, dst] = rid
+                rounds.append(CommRound(
+                    delta=delta, length=length,
+                    rows=np.stack(rows), slot=slot,
+                ))
         segments.append(PlanSegment(
             start=grp[0], stop=grp[-1] + 1,
             ticks=tuple(ticks), step_of_tick=tuple(step_of_tick),

@@ -33,6 +33,7 @@ from the signature and params taken from operands.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, List, Mapping, Optional, Tuple
 
 import jax
@@ -46,6 +47,10 @@ __all__ = [
     "node_gather_rows",
     "param_slices",
     "make_kernel",
+    "SpanTable",
+    "coalesce_spans",
+    "resolve_rows",
+    "max_sentinel_runs",
 ]
 
 Sig = Tuple  # (op_sig, slot_shapes), nested hashable tuples
@@ -318,12 +323,54 @@ def make_kernel(sig: Sig) -> Callable:
     if kind == "add":
         return lambda x, ins, pops: ins[0] + ins[1]
     if kind == "conv":
-        _k, s, wpads, _wsh = op_sig
+        _k, s, wpads, wsh = op_sig
+        kh, kw, cin, cout = wsh
 
         def kern(x, ins, pops):
             w_, b_ = pops
+            xi = ins[0]
+            if isinstance(w_, jax.core.Tracer):
+                # patches + GEMM instead of conv_general_dilated: when the
+                # weights arrive as jit operands (table-indexed, not trace
+                # constants) XLA:CPU lowers a dynamic-filter convolution
+                # through a slow generic path while a dynamic-rhs dot
+                # stays on the fast Eigen contraction.  kh*kw static
+                # slices + one concat reproduce im2col exactly (dy-major,
+                # dx, cin — the same flattening order as the HWIO filter
+                # reshape).
+                wl, wr = wpads
+                if wl or wr:
+                    xi = jax.lax.pad(
+                        xi, jnp.float32(0),
+                        ((0, 0, 0), (0, 0, 0), (wl, wr, 0), (0, 0, 0)),
+                    )
+                bsz, h, w, _c = xi.shape
+                ho = (h - kh) // s + 1
+                wo = (w - kw) // s + 1
+                cols = [
+                    jax.lax.slice(
+                        xi, (0, dy, dx, 0),
+                        (bsz, dy + (ho - 1) * s + 1,
+                         dx + (wo - 1) * s + 1, cin),
+                        (1, s, s, 1),
+                    )
+                    for dy in range(kh) for dx in range(kw)
+                ]
+                p = (
+                    cols[0] if len(cols) == 1
+                    else jax.lax.concatenate(cols, 3)
+                )
+                w2 = jax.lax.reshape(w_, (kh * kw * cin, cout))
+                y = jax.lax.dot_general(
+                    p, w2, (((3,), (0,)), ((), ()))
+                ) + b_
+                return jax.nn.relu(y)
+            # constant (baked) weights take the native convolution — the
+            # same Eigen fast path the unrolled executor's closed-over
+            # params hit
             y = jax.lax.conv_general_dilated(
-                ins[0], w_, (s, s), ((0, 0), wpads), dimension_numbers=dn
+                xi, w_, (s, s), ((0, 0), wpads),
+                dimension_numbers=dn,
             ) + b_
             return jax.nn.relu(y)
         return kern
@@ -368,3 +415,160 @@ def make_kernel(sig: Sig) -> Callable:
             return o.reshape(b_, s_, nh * hd)
         return kern
     raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------- #
+# span coalescing: gather rows -> contiguous dynamic_slice spans
+# --------------------------------------------------------------------------- #
+# A gathered slot is usually *piecewise* contiguous: a conv tile's rows are
+# contiguous runs of the producer register broken only at row boundaries and
+# halo pads, a seen-through concat interleaves contiguous channel blocks.
+# Emitting one element ``lax.gather`` per slot makes XLA:CPU copy those runs
+# element by element; cutting each row at the union of its occurrences'
+# discontinuities instead yields a *static* piece structure shared by every
+# occurrence of the signature, where each long piece is one memcpy-width
+# ``dynamic_slice`` from a starts table.  Sentinel (halo-pad) entries resolve
+# to ascending positions inside pristine sentinel *regions* (see
+# :func:`resolve_rows`), so boundary tiles stay piecewise contiguous too and
+# keep sharing the interior tiles' span structure.
+
+# pieces at least this long become dynamic_slice spans; shorter pieces merge
+# into element-gather remainder chunks.  Every span lowers to one
+# dynamic_slice per signature branch, so the thresholds trade assembly
+# coverage against traced-program size: (4, 192) puts ~96% of a grid-sliced
+# inception plan's assembly on the memcpy path but multiplies segmented
+# *trace* time ~4x (thousands of slice ops), while the defaults keep the
+# long halo-row runs — the bulk of the moved bytes — and leave the fine
+# channel interleaves of seen-through concats (whose break union shatters
+# rows into short pieces) on the single element gather.  Measured runtime
+# is flat across the range on serialized 1-core CI hosts; re-sweep on real
+# multi-core targets before tightening further.
+MIN_SPAN = 16
+# fall back to one whole-slot element gather past this many span pieces
+# (a long interleave is better served by one gather than by dozens of
+# dynamic_slice + concatenate ops)
+MAX_SPANS = 32
+# ... or when spans would cover less than this fraction of the slot
+MIN_COVERAGE = 0.4
+
+
+@dataclasses.dataclass(frozen=True)
+class SpanTable:
+    """Static piece decomposition of one signature slot's gather rows.
+
+    ``lens``/``kinds`` describe the pieces in row order (shared by every
+    occurrence): a ``"span"`` piece of length ``lens[i]`` is assembled by one
+    ``dynamic_slice`` starting at the occurrence's next ``starts`` column; a
+    ``"rem"`` piece comes from the occurrence's next ``rem`` element-gather
+    columns.  ``coverage`` is the fraction of slot elements served by spans.
+    """
+
+    lens: Tuple[int, ...]
+    kinds: Tuple[str, ...]
+    starts: np.ndarray   # (n_occ, n_span) int32 span start positions
+    rem: np.ndarray      # (n_occ, n_rem_elements) int32 scattered positions
+    coverage: float
+
+
+def _max_run(mask: np.ndarray) -> int:
+    """Longest run of True along the last axis of a boolean array."""
+    if not mask.any():
+        return 0
+    m = mask.astype(np.int64)
+    c = np.cumsum(m, axis=-1)
+    reset = np.maximum.accumulate(np.where(m == 0, c, 0), axis=-1)
+    return int(((c - reset) * m).max())
+
+
+def max_sentinel_runs(row: np.ndarray) -> Tuple[int, int]:
+    """Longest consecutive ``ZERO_PAD`` / ``NEGINF_PAD`` runs of a raw row —
+    sizes the executor's sentinel regions so every pad run can resolve to a
+    contiguous ascending range (and hence join a span)."""
+    return _max_run(row == ZERO_PAD), _max_run(row == NEGINF_PAD)
+
+
+def resolve_rows(
+    raw: np.ndarray, zero_base: int, neginf_base: int
+) -> np.ndarray:
+    """Map sentinel entries of raw gather rows to buffer positions.
+
+    Each maximal run of ``ZERO_PAD`` (``NEGINF_PAD``) becomes the ascending
+    range ``[base, base + run_len)`` inside the zero (-inf) region, so a halo
+    pad gathers a *contiguous* stretch of pristine sentinel columns instead
+    of one repeated column — boundary tiles stay piecewise contiguous and
+    coalesce into the same spans as interior tiles.  The caller guarantees
+    the regions are at least as long as the longest run
+    (:func:`max_sentinel_runs`)."""
+    raw = np.atleast_2d(raw)
+    out = raw.astype(np.int64).copy()
+    idx = np.arange(raw.shape[1], dtype=np.int64)
+    for sent, base in ((ZERO_PAD, zero_base), (NEGINF_PAD, neginf_base)):
+        msk = raw == sent
+        if not msk.any():
+            continue
+        first = msk.copy()
+        first[:, 1:] &= ~msk[:, :-1]
+        run_start = np.maximum.accumulate(
+            np.where(first, idx[None, :], -1), axis=1
+        )
+        out[msk] = base + (idx[None, :] - run_start)[msk]
+    return out.astype(np.int32)
+
+
+def coalesce_spans(
+    rows: np.ndarray,
+    min_span: int = MIN_SPAN,
+    max_spans: int = MAX_SPANS,
+    min_coverage: float = MIN_COVERAGE,
+) -> Optional[SpanTable]:
+    """Cut resolved gather rows ``(n_occ, L)`` into maximal contiguous spans.
+
+    Pieces are delimited by the union of every occurrence's discontinuities,
+    so the piece structure is static per signature and every occurrence is
+    contiguous inside every piece.  Pieces of at least ``min_span`` elements
+    (or a piece covering the whole row) become ``dynamic_slice`` spans;
+    adjacent shorter pieces merge into element-gather remainder chunks.
+    Returns ``None`` — keep the whole-slot element gather — when there are
+    no spans, too many (``max_spans``), or they cover less than
+    ``min_coverage`` of the slot."""
+    n_occ, L = rows.shape
+    if L == 0 or n_occ == 0:
+        return None
+    brk = (np.diff(rows.astype(np.int64), axis=1) != 1).any(axis=0)
+    bounds = np.concatenate(([0], np.nonzero(brk)[0] + 1, [L]))
+    lens: List[int] = []
+    kinds: List[str] = []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        if hi - lo >= min_span or hi - lo == L:
+            lens.append(int(hi - lo))
+            kinds.append("span")
+        elif kinds and kinds[-1] == "rem":
+            lens[-1] += int(hi - lo)
+        else:
+            lens.append(int(hi - lo))
+            kinds.append("rem")
+    n_span = kinds.count("span")
+    if n_span == 0 or n_span > max_spans:
+        return None
+    coverage = sum(l for l, k in zip(lens, kinds) if k == "span") / L
+    if coverage < min_coverage:
+        return None
+    starts: List[np.ndarray] = []
+    rems: List[np.ndarray] = []
+    p = 0
+    for ln, kind in zip(lens, kinds):
+        if kind == "span":
+            starts.append(rows[:, p])
+        else:
+            rems.append(rows[:, p:p + ln])
+        p += ln
+    return SpanTable(
+        lens=tuple(lens),
+        kinds=tuple(kinds),
+        starts=np.stack(starts, axis=1).astype(np.int32),
+        rem=(
+            np.concatenate(rems, axis=1).astype(np.int32)
+            if rems else np.zeros((n_occ, 0), np.int32)
+        ),
+        coverage=float(coverage),
+    )

@@ -26,7 +26,18 @@ invariants every executor in the repo relies on:
   order, ticks are uniform (at most one node per worker per tick, ordered
   as the superstep's segments), and every ring-round index row points only
   at real register elements with padding strictly at the tail aimed past
-  every register (the sentinel-column contract of the segmented executor).
+  every register (the sentinel-column contract of the segmented executor);
+* **cohort rounds** (given a model) — every emitted ring round ships at
+  least one payload (build-time dead-round elision leaves nothing to skip
+  at runtime), is padded exactly to its widest member row, carries no
+  all-padding rows beyond the sentinel row 0, and rounds of the same delta
+  fire on disjoint ticks (each tick's payload for a delta lives in exactly
+  one cohort);
+* **span tables** (given a model) — every signature slot the executor
+  would span-coalesce reconstructs its resolved gather rows exactly from
+  the static piece structure (``dynamic_slice`` spans + element-gather
+  remainders), so the memcpy fast path is bit-equivalent to the element
+  gather it replaces.
 
 The pass is pure numpy (no jax), so CI and the elastic replan path run it
 on every plan — original and replanned — before anything executes.
@@ -221,6 +232,97 @@ def _check_segments(
                         f"ring round delta={r.delta} row {k} interleaves "
                         f"padding with real positions"
                     )
+            # cohort invariants: dead rounds are elided at build time,
+            # padding is tight (some member row fills the round), and no
+            # referenced row beyond the sentinel row 0 is all-padding
+            slot = np.asarray(r.slot)
+            if r.length < 1:
+                _fail(f"ring round delta={r.delta} has length {r.length}")
+            if not (slot != 0).any():
+                _fail(
+                    f"ring round delta={r.delta} has no active (tick, dst) "
+                    f"cell (dead rounds must be elided at build time)"
+                )
+            n_real_rows = (rows != pad).sum(axis=1)
+            if rows.shape[0] > 1 and int(n_real_rows[1:].max()) != r.length:
+                _fail(
+                    f"ring round delta={r.delta} padded to {r.length} but "
+                    f"its widest row ships {int(n_real_rows[1:].max())} "
+                    f"(cohort padding must be tight)"
+                )
+            if rows.shape[0] > 1 and int(n_real_rows[1:].min()) == 0:
+                _fail(
+                    f"ring round delta={r.delta} references an all-padding "
+                    f"row beyond the sentinel row 0"
+                )
+        # rounds of one delta fire on disjoint ticks: a tick's payload for
+        # a delta belongs to exactly one cohort
+        by_delta: Dict[int, np.ndarray] = {}
+        for r in seg.rounds:
+            active = (np.asarray(r.slot) != 0).any(axis=1)
+            prev = by_delta.get(r.delta)
+            if prev is not None and bool((prev & active).any()):
+                _fail(
+                    f"two ring rounds of delta={r.delta} are active on the "
+                    f"same tick (cohorts must partition a delta's ticks)"
+                )
+            by_delta[r.delta] = active if prev is None else (prev | active)
+
+
+def _check_spans(plan: ExecutionPlan, model, layout: RegisterLayout) -> None:
+    """Span-coalesced assembly is bit-equivalent to the element gather.
+
+    For every node the plan computes, resolve its gather rows the way the
+    segmented executor does (sentinel runs become ascending ranges in
+    pristine regions) and, wherever :func:`~repro.codegen.segment.
+    coalesce_spans` elects the memcpy fast path, re-expand the static piece
+    structure and require it to reproduce the resolved rows exactly."""
+    from repro.codegen.segment import (
+        coalesce_spans,
+        max_sentinel_runs,
+        node_gather_rows,
+        resolve_rows,
+    )
+
+    zrun = nrun = 1
+    raw: Dict[str, list] = {}
+    for step in plan.steps:
+        for seg_nodes in step.compute:
+            for node in seg_nodes:
+                if node in raw:
+                    continue
+                rws = node_gather_rows(model, node, layout.offsets)
+                raw[node] = rws
+                for rr in rws:
+                    z, nf = max_sentinel_runs(np.atleast_2d(rr))
+                    zrun, nrun = max(zrun, z), max(nrun, nf)
+    zero_base = layout.total
+    neginf_base = layout.total + zrun
+    for node, rws in raw.items():
+        for j, rr in enumerate(rws):
+            rows = resolve_rows(np.atleast_2d(rr), zero_base, neginf_base)
+            span = coalesce_spans(rows)
+            if span is None:
+                continue
+            rebuilt = np.empty_like(rows)
+            p = si = ri = 0
+            for ln, kind in zip(span.lens, span.kinds):
+                if kind == "span":
+                    rebuilt[:, p:p + ln] = (
+                        span.starts[:, si, None]
+                        + np.arange(ln, dtype=np.int32)
+                    )
+                    si += 1
+                else:
+                    rebuilt[:, p:p + ln] = span.rem[:, ri:ri + ln]
+                    ri += ln
+                p += ln
+            if p != rows.shape[1] or not (rebuilt == rows).all():
+                _fail(
+                    f"span table of node {node!r} slot {j} does not "
+                    f"reconstruct its gather rows (span fast path would "
+                    f"diverge from the element gather)"
+                )
 
 
 def validate_plan(
@@ -250,5 +352,6 @@ def validate_plan(
         layout = RegisterLayout.of(plan, shapes, liveness=live)
         _check_layout(plan, layout, live)
         _check_segments(plan, layout)
+        _check_spans(plan, model, layout)
         stats["packed_elements"] = layout.total
     return stats
