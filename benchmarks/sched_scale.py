@@ -26,6 +26,18 @@ Times the fast-path pipeline across DAG sizes and worker counts:
                           m=8 (full runs); resumed output asserted allclose
                           to ``run_sequential``, replan wall time and
                           migrated bytes join the trend gates
+* ``serve_chaos``       — zero-loss chaos serving drill
+                          (``benchmarks/serve_chaos.py``): seeded Poisson
+                          trace with deadlines/backpressure through the
+                          sliced-plan ``serve.Frontend`` while a campaign
+                          kills one worker and straggles another mid-trace;
+                          asserts zero request loss, full recovery (dead +
+                          cordoned workers out of the final fleet) and
+                          seed-identical replay; p50/p99/shed/requests-per-s
+                          reported, ``replan_s`` and ``migrated_bytes`` join
+                          the trend gates (sliced lenet5 m=4 always — the CI
+                          smoke; 1k-request grid-sliced inception(64) m=8 on
+                          full runs)
 * ``trace``             — shard_map MPMD executor trace (lowering) time on
                           the ``schedule_cnn`` example models **and sliced
                           plans** (``trace_ms`` per sliced plan, unrolled
@@ -68,6 +80,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
 import json
+import sys
 import time
 
 from repro.core import random_dag, validate
@@ -417,6 +430,8 @@ def check_trend(results, baseline_path):
             return ("grid", r["model"], r["input_hw"], r["n_workers"])
         if r.get("kind") == "fault_recovery":
             return ("fault", r["model"], r["n_workers"], r["kill_step"])
+        if r.get("kind") == "serve_chaos":
+            return ("serve", r["model"], r["n_workers"], r["n_requests"])
         return None
 
     if not os.path.exists(baseline_path):
@@ -732,6 +747,10 @@ def main():
     bench_sliced(workers, results)
     bench_grid(results)
     bench_fault_recovery(results, args.quick)
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from serve_chaos import bench_serve_chaos
+
+    bench_serve_chaos(results, args.quick)
 
     # acceptance: ISH @ 1000 nodes / 8 workers under budget
     ish_1000_8 = [

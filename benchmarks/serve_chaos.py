@@ -1,0 +1,167 @@
+"""Zero-loss chaos serving drill over sliced plans — the PR 8 headline.
+
+Drives a seeded Poisson request trace (mixed request sizes, per-request
+deadlines) through :class:`repro.serve.Frontend` on a sliced plan while a
+:class:`~repro.serve.frontend.ChaosCampaign` kills one worker and makes a
+second one straggle mid-trace, then asserts the three contracts CI gates:
+
+* **zero-loss**: every submitted request completes with output allclose to
+  the fault-free per-pool-entry reference, or is explicitly shed with a
+  reason — none vanish (``Frontend.audit``);
+* **recovery**: the kill is detected, the plan is re-solved for the
+  survivors, in-flight superstep state migrates, the trace drains to
+  completion on the shrunken fleet (dead worker and cordoned straggler
+  both out of the final fleet);
+* **replay**: the identical seed replays the identical outcome — statuses,
+  shed reasons, retry counts, latencies and output bytes
+  (``Frontend.fingerprint``).
+
+Rows land in BENCH_sched.json via ``benchmarks/sched_scale.py`` with
+``replan_s`` on the timing trend gate and ``migrated_bytes`` on the byte
+trend gate.  Quick mode (the CI smoke) runs sliced lenet5 m=4; the full
+run adds the headline 1k-request grid-sliced inception(64) m=8 drill.
+"""
+import argparse
+import json
+import time
+
+SEED = 1234
+
+
+def chaos_cases(quick):
+    from repro.models.cnn import inception_net, lenet5
+    from repro.models.slicing import uniform_factors
+
+    # (tag, model, factors, m, n_requests, rate multiple of service time)
+    cases = [
+        ("lenet5", lenet5(28), uniform_factors(lenet5(28), 4), 4,
+         150 if quick else 300, 2.0),
+    ]
+    if not quick:
+        model = inception_net(64)
+        base = uniform_factors(model, 8, spatial=True)
+        grid = {k: ((2, 4) if v == (1, 8) else v) for k, v in base.items()}
+        cases.append(("inception@grid2x4", model, grid, 8, 1000, 3.0))
+    return cases
+
+
+def run_chaos_trace(tag, model, factors, m, n_requests, rate_mult,
+                    seed=SEED, replay=True):
+    """Build the sliced frontend, run the seeded chaos trace, audit it.
+
+    Returns the benchmark row; raises on any violated contract."""
+    import jax
+    import numpy as np
+    from repro.core.costmodel import KEYSTONE_CPU
+    from repro.models.cnn import run_sequential
+    from repro.models.slicing import slice_model
+    from repro.serve import (
+        ChaosCampaign, Frontend, input_pool, poisson_trace,
+    )
+
+    params = model.init_params(jax.random.PRNGKey(0))
+    sliced = slice_model(model, factors)
+    dag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
+
+    def build():
+        return Frontend(sliced, params, dag, m=m, hw=KEYSTONE_CPU)
+
+    fe = build()
+    pool = input_pool(model.layers[0].out_shape, 8, seed=seed + 1)
+    refs = np.stack([
+        np.asarray(run_sequential(sliced, params, pool[k:k + 1]))[0]
+        for k in range(len(pool))
+    ])
+    trace = poisson_trace(
+        n_requests, seed=seed, rate=rate_mult / fe.est_service,
+        rows=(1, 2), pool_size=len(pool), deadline=(6.0, 18.0),
+        service=fe.est_service,
+    )
+    chaos = ChaosCampaign.kill_and_straggle(n_requests, m, seed=seed)
+    kill_victim = chaos.events[0].fault.worker
+    strag_victim = chaos.events[1].fault.worker
+
+    t0 = time.perf_counter()
+    summary = fe.run_trace(trace, pool, chaos=chaos)
+    wall_s = time.perf_counter() - t0
+
+    audit = fe.audit(ref_pool=refs)
+    assert audit["zero_loss"], (
+        f"{tag}: zero-loss violated — leaked={audit['leaked']} "
+        f"unreasoned={audit['unreasoned_sheds']} diverged={audit['diverged']} "
+        f"max_err={audit['max_err']}"
+    )
+    actions = [r["action"] for r in fe.recoveries]
+    assert "remesh" in actions, f"{tag}: worker kill never recovered"
+    assert kill_victim not in fe.fleet, f"{tag}: dead worker back in fleet"
+    assert strag_victim not in fe.fleet, (
+        f"{tag}: chronic straggler w{strag_victim} never cordoned "
+        f"(fleet={fe.fleet}, recoveries={actions})"
+    )
+    assert summary["completed"] + summary["shed"] == n_requests
+
+    replay_ok = None
+    if replay:
+        fe2 = build()
+        fe2.run_trace(trace, pool, chaos=chaos)
+        replay_ok = fe.fingerprint() == fe2.fingerprint()
+        assert replay_ok, f"{tag}: identical seed did not replay identically"
+
+    remesh = next(r for r in fe.recoveries if r["action"] == "remesh")
+    row = {
+        "kind": "serve_chaos",
+        "model": tag,
+        "n_workers": m,
+        "n_requests": n_requests,
+        "completed": summary["completed"],
+        "shed": summary["shed"],
+        "shed_by_reason": summary["shed_by_reason"],
+        "retried": summary["retried"],
+        "deadline_misses": summary["deadline_misses"],
+        "p50_ms": summary["p50_ms"],
+        "p99_ms": summary["p99_ms"],
+        "requests_per_s": summary["requests_per_s"],
+        "kill_worker": kill_victim,
+        "straggle_worker": strag_victim,
+        "final_fleet": list(fe.fleet),
+        "recoveries": actions,
+        "replan_s": round(
+            max(r["replan_ms"] for r in fe.recoveries) / 1e3, 4
+        ),
+        "migrated_bytes": remesh["migrated_bytes"],
+        "zero_loss": True,
+        "replay_ok": replay_ok,
+        "wall_s": round(wall_s, 2),
+    }
+    print(
+        f"serve_chaos {tag:18s} m={m} n={n_requests}: "
+        f"{row['completed']} done / {row['shed']} shed "
+        f"({row['retried']} retries)  p50 {row['p50_ms']}ms  "
+        f"p99 {row['p99_ms']}ms  {row['requests_per_s']} req/s  "
+        f"replan {row['replan_s'] * 1e3:.0f}ms  migrated "
+        f"{row['migrated_bytes'] / 1e3:.0f}KB  fleet {row['final_fleet']}  "
+        f"zero-loss=1 replay={int(bool(replay_ok))}  [{wall_s:.1f}s]"
+    )
+    return row
+
+
+def bench_serve_chaos(results, quick):
+    for case in chaos_cases(quick):
+        results.append(run_chaos_trace(*case))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    results = []
+    bench_serve_chaos(results, args.quick)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"results": results}, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,11 @@
 # plan, or under the absolute-ms floor that binds on 1-core hosts where
 # fake devices serialize), the fault-drill smoke (a deterministic kill campaign
 # on sliced lenet5: detect -> replan m-1 -> migrate registers -> resume,
-# resumed output asserted allclose to run_sequential), and the trend gates
+# resumed output asserted allclose to run_sequential), the serve-chaos
+# smoke (a seeded Poisson trace with deadlines/backpressure through the
+# sliced-plan serving frontend while a campaign kills one worker and
+# straggles another mid-trace: zero request loss, dead + cordoned workers
+# out of the final fleet, seed-identical replay), and the trend gates
 # against the committed BENCH_sched.json —
 # 2x on scheduler/replan timings, 1.5x on sliced/grid transfer bytes and
 # fault-row migrated bytes (the DSH/ISH ratio bar needs the 2000-node

@@ -1289,6 +1289,10 @@ def _build_segmented(
     )
     wrapped.width = width
     wrapped.segment_spans = tuple((s.start, s.stop) for s in segments)
+    # superstep each checkpoint snapshot is the entering barrier of:
+    # snaps[k] == the runner's barrier entering superstep checkpoint_steps[k]
+    # (migrate_registers takes exactly this (snapshot, step) pair)
+    wrapped.checkpoint_steps = tuple(s.stop for s in segments)
     wrapped.segment_stats = seg_stats
 
     if profile:

@@ -101,6 +101,7 @@ class HealthMonitor:
         self,
         certificate: Optional[WCETCertificate] = None,
         slack: float = 1.0,
+        commit: bool = True,
     ) -> Dict[str, List[int]]:
         """Health verdicts: ``dead``, ``stragglers`` and — given a WCET
         ``certificate`` — ``deadline`` (workers whose recorded superstep
@@ -113,6 +114,17 @@ class HealthMonitor:
         The median test uses ``is not None``: a fleet median of exactly
         0.0 (quantized timers in tests, sub-resolution steps) previously
         disabled straggler detection entirely.
+
+        Verdicts are **stable under repetition**: ``dead`` lists every
+        worker currently condemned — both heartbeats that went stale since
+        the last check and workers an earlier check already committed
+        dead.  (Previously a second ``check()`` returned an empty ``dead``
+        list because the first call had flipped ``alive``, so any caller
+        running after ``ElasticPlanner.replan`` — whose internal check
+        commits the deaths — saw a clean fleet.)  ``commit=False`` makes
+        the call fully read-only: the verdict is computed but no
+        ``alive``/``straggler`` state is mutated, so a later committing
+        check still observes and commits the same deaths.
         """
         dead, stragglers, deadline = [], [], []
         dying = {
@@ -128,25 +140,27 @@ class HealthMonitor:
         fleet_median = statistics.median(medians) if medians else None
         for w in self.workers.values():
             if not w.alive:
+                dead.append(w.worker_id)  # sticky: committed by a prior check
                 continue
             if w.worker_id in dying:
-                w.alive = False
+                if commit:
+                    w.alive = False
                 dead.append(w.worker_id)
                 continue
-            if (
+            is_straggler = (
                 fleet_median is not None
-                and w.step_times
+                and bool(w.step_times)
                 and statistics.median(w.step_times)
                 > self.straggler_factor * fleet_median
-            ):
-                w.straggler = True
+            )
+            if commit:
+                w.straggler = is_straggler
+            if is_straggler:
                 stragglers.append(w.worker_id)
-            else:
-                w.straggler = False
             if certificate is not None and w.timings:
                 if certificate.overruns(w.timings, slack=slack):
                     deadline.append(w.worker_id)
-        verdict = {"dead": dead, "stragglers": stragglers}
+        verdict = {"dead": sorted(dead), "stragglers": stragglers}
         if certificate is not None:
             verdict["deadline"] = deadline
         return verdict
@@ -231,14 +245,23 @@ class ElasticPlanner:
         exclude_stragglers: bool = False,
         certificate: Optional[WCETCertificate] = None,
         slack: float = 1.0,
+        exclude: Sequence[int] = (),
     ) -> ElasticPlan:
+        """``exclude`` removes explicit alive workers from the new fleet —
+        the caller's own attribution (a WCET-overrunning worker on a
+        load-imbalanced sliced plan can be far slower than its share yet
+        never cross the cross-fleet median straggler test; a previously
+        cordoned worker must stay out of every later replan)."""
         verdict = monitor.check(certificate=certificate, slack=slack)
         workers = monitor.alive_workers()
         action = "continue"
         if verdict["dead"]:
             action = "remesh"
-        if exclude_stragglers and verdict["stragglers"]:
-            workers = [w for w in workers if w not in verdict["stragglers"]]
+        drop = set(exclude)
+        if exclude_stragglers:
+            drop |= set(verdict["stragglers"])
+        if drop & set(workers):
+            workers = [w for w in workers if w not in drop]
             action = "exclude_straggler"
         if action == "continue" and verdict.get("deadline"):
             # the fleet is intact but observed supersteps break the

@@ -183,6 +183,7 @@ def run_with_faults(
     skip: Optional[Set[str]] = None,
     init_bufs: Optional[Sequence[np.ndarray]] = None,
     keep_snapshots: bool = False,
+    worker_ids: Optional[Sequence[int]] = None,
 ) -> RunOutcome:
     """Execute ``plan`` superstep-by-superstep with barrier snapshots.
 
@@ -192,9 +193,13 @@ def run_with_faults(
     packed per-worker carries produced by ``migrate_registers``).  With a
     ``monitor`` + ``dag``, per-worker step timings (``dag.t`` units) are
     recorded and heartbeats fed, so detection runs on the same clock as
-    the drill.  ``keep_snapshots`` retains every barrier (property tests);
-    otherwise only the latest barrier is kept — O(1) checkpoint memory,
-    which is the deployment posture.
+    the drill.  ``worker_ids`` maps the plan's worker indices onto the
+    monitor's worker ids (a replanned m−1 plan numbers its workers
+    ``0..m-2`` while the monitor keeps the original fleet's ids; default
+    identity).  ``keep_snapshots`` retains every barrier (property tests);
+    otherwise barriers are packed only where recovery can need them — at
+    injected kill steps and the final barrier — which keeps sustained
+    serving traffic from paying a full register-file copy per superstep.
     """
     import jax.numpy as jnp
 
@@ -202,6 +207,8 @@ def run_with_faults(
 
     skip = skip or set()
     m = plan.n_workers
+    if worker_ids is None:
+        worker_ids = list(range(m))
     batch = int(x.shape[0])
     regs: List[Dict[str, np.ndarray]] = [dict() for _ in range(m)]
     if init_bufs is not None:
@@ -214,16 +221,21 @@ def run_with_faults(
     slow: Dict[int, float] = {}
     retrans = 0.0
     snapshots: Dict[int, List[np.ndarray]] = {}
+    kill_steps = (
+        {e.step for e in faults.events if e.kind == "kill"}
+        if faults is not None else set()
+    )
 
-    def barrier(k: int) -> List[np.ndarray]:
+    def barrier(k: int, needed: bool) -> None:
+        if not (keep_snapshots or needed):
+            return
         snap = [layout.pack(regs[w], batch) for w in range(m)]
         if not keep_snapshots:
             snapshots.clear()
         snapshots[k] = snap
-        return snap
 
     for i, step in enumerate(plan.steps):
-        barrier(i)
+        barrier(i, needed=i in kill_steps)
         events = faults.at(i) if faults is not None else ()
         kill = next((e for e in events if e.kind == "kill"), None)
         if kill is not None:
@@ -233,7 +245,7 @@ def run_with_faults(
             if monitor is not None:
                 for w in range(m):
                     if w != kill.worker:
-                        monitor.heartbeat(w)
+                        monitor.heartbeat(worker_ids[w])
             return RunOutcome(
                 status="killed", output=None, snapshots=snapshots,
                 fault=kill, step=i, retransmitted_bytes=retrans,
@@ -278,9 +290,9 @@ def run_with_faults(
                 step_times[i][w] * slow.get(w, 1.0) for w in range(m)
             ]
             for w in range(m):
-                monitor.record_step(i, dts[w], worker=w)
+                monitor.record_step(i, dts[w], worker=worker_ids[w])
             monitor.advance(max(dts) if dts else 0.0)
-    barrier(len(plan.steps))
+    barrier(len(plan.steps), needed=True)
     y = np.asarray(regs[plan.sink_worker][plan.sink])
     return RunOutcome(
         status="ok", output=y, snapshots=snapshots,
@@ -298,12 +310,13 @@ def resume_plan(
     completed: Set[str],
     monitor: Optional[HealthMonitor] = None,
     dag=None,
+    worker_ids: Optional[Sequence[int]] = None,
 ) -> RunOutcome:
     """Run a migrated plan to completion, skipping completed computes."""
     return run_with_faults(
         new_plan, model, params, x, new_layout,
         skip=set(completed), init_bufs=list(new_bufs),
-        monitor=monitor, dag=dag,
+        monitor=monitor, dag=dag, worker_ids=worker_ids,
     )
 
 

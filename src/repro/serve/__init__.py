@@ -1,3 +1,24 @@
 from repro.serve.engine import ServeConfig, Engine, make_prefill_step, make_decode_step
+from repro.serve.frontend import (
+    Backpressure,
+    ChaosCampaign,
+    ChaosEvent,
+    Frontend,
+    FrontendConfig,
+    ServeRequest,
+)
+from repro.serve.trace import (
+    TraceRequest,
+    input_pool,
+    percentile,
+    poisson_trace,
+    trace_summary,
+)
 
-__all__ = ["ServeConfig", "Engine", "make_prefill_step", "make_decode_step"]
+__all__ = [
+    "ServeConfig", "Engine", "make_prefill_step", "make_decode_step",
+    "Backpressure", "ChaosCampaign", "ChaosEvent", "Frontend",
+    "FrontendConfig", "ServeRequest",
+    "TraceRequest", "input_pool", "percentile", "poisson_trace",
+    "trace_summary",
+]

@@ -86,6 +86,7 @@ class Engine:
         certificate=None,
         check_every: int = 8,
         deadline_slack: float = 1.0,
+        timing_source: Optional[Callable[[], List[Tuple[int, float]]]] = None,
     ):
         self.cfg = cfg
         self.scfg = scfg
@@ -96,8 +97,10 @@ class Engine:
         self.certificate = certificate
         self.check_every = check_every
         self.deadline_slack = deadline_slack
+        self.timing_source = timing_source
         self.degraded = False
         self.elastic_plan = None
+        self._acked_dead: set = set()
         self.last_verdict: Optional[Dict[str, List[int]]] = None
         self._ticks = 0
         self._prefill1 = jax.jit(make_prefill_step(cfg, dataclasses.replace(scfg)))
@@ -120,62 +123,71 @@ class Engine:
     def _admit(self):
         """Claim free slots for queued requests; prefill their prompt.
 
+        A request whose budget is exhausted by the prefill token
+        (``max_new=1``) is finished *here*: it never occupies a slot and
+        never pays a decode tick.  (Previously it was parked in a slot,
+        decoded one extra token, and released a tick later with
+        ``len(out) == 2`` — one wasted decode and a contract violation.)
+
         In degraded mode at most one request is admitted per tick: prefill
         is the expensive, bursty part of a tick, and a shrinking fleet
         should drain its live slots rather than take on a full pool of new
         work between replan and remesh."""
         admitted = 0
         for s in range(self.scfg.slots):
-            if self.slot_req[s] is not None or not self.queue:
+            if self.slot_req[s] is not None:
                 continue
-            if self.degraded and admitted >= 1:
+            while self.queue:
+                if self.degraded and admitted >= 1:
+                    return
+                admitted += 1
+                r = self.queue.pop(0)
+                # per-slot prefill with a single-sequence cache
+                tmp_cache = T.init_cache(self.cfg, 1, self.scfg.max_seq)
+                toks = jnp.asarray(r.prompt, jnp.int32)[None, :]
+                last, tmp_cache = self._prefill1(
+                    self.params, tmp_cache, {"tokens": toks})
+                tok0 = int(jnp.argmax(last[0]))
+                r.out.append(tok0)
+                if len(r.out) >= r.max_new:
+                    r.done = True  # finished at prefill; slot s stays free
+                    continue
+                self.cache = _splice_cache(self.cache, tmp_cache, s)
+                self.next_tok = self.next_tok.at[s, 0].set(tok0)
+                self.slot_req[s] = r
+                self.slot_pos[s] = len(r.prompt)
                 break
-            admitted += 1
-            r = self.queue.pop(0)
-            # per-slot prefill with a single-sequence cache, then splice in
-            tmp_cache = T.init_cache(self.cfg, 1, self.scfg.max_seq)
-            toks = jnp.asarray(r.prompt, jnp.int32)[None, :]
-            last, tmp_cache = self._prefill1(self.params, tmp_cache, {"tokens": toks})
-            tok0 = int(jnp.argmax(last[0]))
-            self.cache = _splice_cache(self.cache, tmp_cache, s)
-            self.next_tok = self.next_tok.at[s, 0].set(tok0)
-            r.out.append(tok0)
-            self.slot_req[s] = r
-            self.slot_pos[s] = len(r.prompt)
 
     def check_health(self) -> Optional[Dict[str, List[int]]]:
         """Ask the monitor for a verdict; enter degraded mode if unhealthy.
 
         With a planner, an unhealthy verdict also produces a replanned
         :class:`ElasticPlan` (validated sliced pipeline) on
-        ``self.elastic_plan``.  Returns the verdict (``None`` if no
-        monitor is wired)."""
+        ``self.elastic_plan``; deaths a published replan already acted on
+        are *acknowledged* and stop counting as unhealthy, so a later
+        clean verdict (no new deaths, no stragglers, no overruns) leaves
+        degraded mode and restores full admission.  Without a planner
+        nothing ever acts on a death, so a dead worker keeps the engine
+        degraded — the conservative default.  Returns the verdict
+        (``None`` if no monitor is wired)."""
         if self.monitor is None:
             return None
-        if self.planner is not None:
+        self.last_verdict = verdict = self.monitor.check(
+            certificate=self.certificate, slack=self.deadline_slack,
+        )
+        new_dead = [w for w in verdict["dead"] if w not in self._acked_dead]
+        unhealthy = bool(
+            new_dead or verdict["stragglers"] or verdict.get("deadline")
+        )
+        if unhealthy and self.planner is not None:
             plan = self.planner.replan(
                 self.monitor, certificate=self.certificate,
                 slack=self.deadline_slack,
             )
-            self.last_verdict = verdict = {
-                "dead": [
-                    w for w in self.monitor.workers
-                    if not self.monitor.workers[w].alive
-                ],
-                "stragglers": [
-                    w for w, st in self.monitor.workers.items()
-                    if st.alive and st.straggler
-                ],
-            }
             if plan.action != "continue":
                 self.elastic_plan = plan
-                self.degraded = True
-        else:
-            self.last_verdict = verdict = self.monitor.check(
-                certificate=self.certificate, slack=self.deadline_slack,
-            )
-            if any(verdict.get(k) for k in ("dead", "stragglers", "deadline")):
-                self.degraded = True
+                self._acked_dead.update(verdict["dead"])
+        self.degraded = unhealthy
         return verdict
 
     def tick(self) -> int:
@@ -187,8 +199,7 @@ class Engine:
         self._admit()
         live = [s for s in range(self.scfg.slots) if self.slot_req[s] is not None]
         if not live:
-            if self.monitor is not None:
-                self.monitor.record_step(self._ticks, time.perf_counter() - t0)
+            self._record_tick(t0)
             return 0
         # a single fixed-shape decode step serves every slot (idle slots too);
         # per-slot positions make ragged continuous batching exact
@@ -204,9 +215,26 @@ class Engine:
                 r.done = True
                 self.slot_req[s] = None
         self.next_tok = toks[:, None].astype(jnp.int32)
-        if self.monitor is not None:
-            self.monitor.record_step(self._ticks, time.perf_counter() - t0)
+        self._record_tick(t0)
         return len(live)
+
+    def _record_tick(self, t0: float) -> None:
+        """Feed the monitor this tick's timings.
+
+        With a ``timing_source`` (``() -> [(worker_id, dt), ...]``, e.g. a
+        sliced-plan frontend's per-worker superstep times) every worker's
+        own time is recorded — the only way straggler detection can work
+        on the engine path.  Without one, the whole-tick wall time lands
+        on worker 0, which keeps heartbeats flowing but (by construction)
+        can never single out a straggler."""
+        if self.monitor is None:
+            return
+        times = self.timing_source() if self.timing_source is not None else None
+        if times:
+            for w, dt in times:
+                self.monitor.record_step(self._ticks, dt, worker=w)
+        else:
+            self.monitor.record_step(self._ticks, time.perf_counter() - t0)
 
     def run_until_done(self, max_ticks: int = 10_000) -> None:
         for _ in range(max_ticks):

@@ -237,6 +237,102 @@ class TestElastic:
         assert plan.certificate.total >= plan.plan.makespan
 
 
+class TestEngineRegression:
+    def test_finished_at_prefill_emits_one_token(self):
+        """Regression: a ``max_new=1`` request got its token at admit time
+        but was parked in a slot, decoded one extra token (``len(out) ==
+        2``), and released a tick later.  It must finish at admit with
+        exactly one token and never occupy a slot."""
+        cfg = get_config("tinyllama-1.1b").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        eng = Engine(cfg, params, ServeConfig(max_seq=64, slots=2))
+        r1 = eng.submit([1, 2, 3], max_new=1)
+        r3 = eng.submit([9, 8, 7], max_new=3)
+        eng.tick()
+        assert r1.done and len(r1.out) == 1
+        # the prefill token is the argmax the reference forward produces
+        lg = forward(params, cfg, {"tokens": jnp.asarray([[1, 2, 3]])},
+                     mode="train")
+        assert r1.out == [int(jnp.argmax(lg[0, -1]))]
+        # the one-token request never held a slot; the other one does
+        assert [req is r3 for req in eng.slot_req] == [True, False]
+        eng.run_until_done()
+        assert r3.done and len(r3.out) == 3
+
+    def test_monitor_check_is_stable_under_repetition(self):
+        """Regression: the first ``check()`` flipped ``w.alive`` and a
+        second call returned an empty ``dead`` list — any caller running
+        after ``ElasticPlanner.replan`` saw a clean fleet."""
+        mon = HealthMonitor(3, heartbeat_timeout=5.0)
+        for w in range(3):
+            mon.heartbeat(w)
+        mon.advance(6.0)
+        mon.heartbeat(0)
+        mon.heartbeat(1)
+        v1 = mon.check()
+        v2 = mon.check()
+        assert v1["dead"] == [2] and v2["dead"] == [2]
+        # read-only verdict: nothing committed, a later commit still lands
+        mon2 = HealthMonitor(3, heartbeat_timeout=5.0)
+        for w in range(3):
+            mon2.heartbeat(w)
+        mon2.advance(6.0)
+        mon2.heartbeat(0)
+        mon2.heartbeat(1)
+        v = mon2.check(commit=False)
+        assert v["dead"] == [2] and mon2.workers[2].alive
+        assert mon2.check()["dead"] == [2]
+        assert not mon2.workers[2].alive
+
+    def test_per_worker_timing_source_detects_straggler(self):
+        """Regression: ``Engine.tick`` recorded the whole-tick wall time
+        against worker 0, so the engine path could never single out a
+        straggler.  A ``timing_source`` feeds each worker its own time."""
+        cfg = get_config("tinyllama-1.1b").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        mon = HealthMonitor(3, heartbeat_timeout=1e9, straggler_factor=2.0)
+        eng = Engine(cfg, params, ServeConfig(max_seq=64, slots=2),
+                     monitor=mon, check_every=1,
+                     timing_source=lambda: [(0, 1.0), (1, 1.0), (2, 5.0)])
+        r = eng.submit([1, 2], max_new=3)
+        eng.run_until_done()
+        assert r.done
+        assert mon.workers[2].step_times and mon.workers[0].step_times
+        assert eng.last_verdict["stragglers"] == [2]
+        assert eng.degraded
+
+    def test_published_replan_restores_full_admission(self):
+        """Degraded-mode recovery: once the planner publishes a replan for
+        a death, the acknowledged death stops counting and a clean verdict
+        restores full (multi-slot) admission."""
+        from repro.core import random_dag
+        cfg = get_config("tinyllama-1.1b").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        mon = HealthMonitor(2, heartbeat_timeout=5.0)
+        planner = ElasticPlanner(random_dag(12, 0.2, seed=1))
+        eng = Engine(cfg, params, ServeConfig(max_seq=64, slots=3),
+                     monitor=mon, planner=planner, check_every=1)
+        mon.heartbeat(0)
+        mon.heartbeat(1)
+        mon.advance(6.0)
+        mon.heartbeat(0)
+        reqs = [eng.submit([i + 1], max_new=4) for i in range(3)]
+        eng.tick()
+        # death detected: degraded, replan published, one slot admitted
+        assert eng.degraded
+        assert eng.elastic_plan is not None
+        assert eng.elastic_plan.action == "remesh"
+        assert eng.elastic_plan.workers == (0,)
+        assert sum(r is not None for r in eng.slot_req) == 1
+        eng.tick()
+        # the published replan acknowledged the death: clean verdict,
+        # full admission resumes (every remaining request gets a slot)
+        assert not eng.degraded
+        assert sum(r is not None for r in eng.slot_req) == 3
+        eng.run_until_done()
+        assert all(r.done and len(r.out) == 4 for r in reqs)
+
+
 class TestEngineDegradation:
     def test_unhealthy_fleet_flips_degraded_and_throttles_admission(self):
         cfg = get_config("tinyllama-1.1b").reduced()
