@@ -54,6 +54,17 @@ Times the fast-path pipeline across DAG sizes and worker counts:
                           under the ``SEGMENTED_RUN_FLOOR_MS`` absolute
                           floor (the binding bar on 1-core CI hosts where
                           fake devices serialize and ratios are noise)
+* ``stream gate``       — the ``buffer_depth`` sweep on the same grid plan
+                          (``benchmarks/stream_overlap.py``): per-depth
+                          sustained supersteps/s through the serving
+                          frontend, comm/compute-overlap fraction from the
+                          ``--profile`` hooks, and the resident staging
+                          footprint; depth >= 2 must sustain
+                          ``STREAM_SPEEDUP`` (1.2x) over depth 1 or beat
+                          the ``STREAM_FLOOR_STEPS_S`` absolute floor (the
+                          1-core CI escape, like the run gate), and
+                          ``peak_staging_bytes`` is deterministic so the
+                          ``kind="stream"`` rows join the byte trend gate
 * reference equivalence — on sizes where the original O(V²·E) driver is
                           affordable, asserts the fast path produces
                           **identical** schedules (same instances, same
@@ -432,6 +443,8 @@ def check_trend(results, baseline_path):
             return ("fault", r["model"], r["n_workers"], r["kill_step"])
         if r.get("kind") == "serve_chaos":
             return ("serve", r["model"], r["n_workers"], r["n_requests"])
+        if r.get("kind") == "stream":
+            return ("stream", r["model"], r["n_workers"], r["buffer_depth"])
         return None
 
     if not os.path.exists(baseline_path):
@@ -456,10 +469,12 @@ def check_trend(results, baseline_path):
                     f"{key(r)} {field}: {cv}s vs baseline {bv}s "
                     f"(> {TREND_FACTOR}x and > +{TREND_SLACK_S}s)"
                 )
-        # byte-volume gates: scheduled transfer bytes and migrated recovery
-        # bytes are deterministic, so any >1.5x growth is a real regression
+        # byte-volume gates: scheduled transfer bytes, migrated recovery
+        # bytes, and the streaming executor's resident staging footprint
+        # are deterministic, so any >1.5x growth is a real regression
         # (a zero-byte baseline row fails on any growth at all)
-        for field in ("transfer_bytes", "migrated_bytes"):
+        for field in ("transfer_bytes", "migrated_bytes",
+                      "peak_staging_bytes"):
             bv, cv = b.get(field), r.get(field)
             if bv is None or cv is None:
                 continue
@@ -775,17 +790,22 @@ def main():
             f"DSH/ISH at 2000/8 is {ratio:.1f}x (budget {DSH_ISH_RATIO_BUDGET}x)"
         )
 
-    # trend gate against the committed baseline (load before overwriting)
-    trend_checked = check_trend(results, args.baseline)
-
     if not args.no_trace:
-        # the gate runs first so its best-of-3 timings see a fresh jax
+        # the gates run first so their best-of-3 timings see a fresh jax
         # process state (the other trace sections leave dozens of compiled
         # executors behind)
         bench_segmented_trace_gate(results)
         bench_segmented_run_gate(results)
+        from stream_overlap import bench_stream_overlap
+
+        bench_stream_overlap(results, args.quick)
         bench_executor_trace(trace_workers, results)
         bench_sliced_trace(trace_workers, results)
+
+    # trend gate against the committed baseline, after every section has
+    # appended its rows (the stream rows' staging bytes join the byte gate);
+    # the baseline is read here, before --out overwrites it below
+    trend_checked = check_trend(results, args.baseline)
 
     payload = {
         "benchmark": "sched_scale",

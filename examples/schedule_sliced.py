@@ -41,10 +41,16 @@ difference columns to comm rounds and kernel work, next to the segment's
 static statistics (ticks, signatures, ring rounds, comm patterns, span
 coverage).
 
+``--stream`` sweeps the segmented executor's ``buffer_depth`` knob
+(1 = write-once staging, 2/4 = rotating double/quad-buffered staging
+frames + donated carry) and prints, per depth, the carry width, resident
+staging footprint, retire-copy volume and the full/comm/kernel/assembly
+totals — the comm-compute-overlap breakdown of the streaming mode.
+
     PYTHONPATH=src python examples/schedule_sliced.py \
         [--model inception|lenet5|transformer] [--input 64] [--workers 8]
         [--factor 8] [--spatial] [--auto-factors | --grid] [--hw keystone|tpu]
-        [--tighten-s 0] [--segmented] [--profile]
+        [--tighten-s 0] [--segmented] [--profile] [--stream]
 """
 import argparse
 import os
@@ -154,6 +160,11 @@ def main():
                          "full / no-comm / assembly-only modes (comm = full "
                          "- nocomm, kernels = nocomm - assembly) next to "
                          "the static span/round statistics")
+    ap.add_argument("--stream", action="store_true",
+                    help="buffer_depth sweep {1,2,4} of the segmented "
+                         "executor: per-depth carry width, staging "
+                         "footprint, retire volume and full/comm/kernel/"
+                         "assembly totals (the streaming overlap breakdown)")
     args = ap.parse_args()
     if args.spatial and (args.grid or args.auto_factors):
         ap.error("--spatial only applies to uniform factors; the grid/parity "
@@ -229,7 +240,7 @@ def main():
           f"across {ps['origins']} originating layers "
           f"(max {ps['max_transfers_per_origin']} transfers per layer)")
 
-    if not args.skip_exec or args.segmented or args.profile:
+    if not args.skip_exec or args.segmented or args.profile or args.stream:
         key = jax.random.PRNGKey(0)
         params = model.init_params(key)
         x = jax.random.normal(key, (2, *model.layers[0].out_shape))
@@ -239,11 +250,11 @@ def main():
         print(f"max|sliced parallel - sequential| = "
               f"{float(jnp.abs(y - ref).max()):.2e}")
 
-    if args.segmented or args.profile:
+    if args.segmented or args.profile or args.stream:
         if jax.device_count() < args.workers:
-            print(f"--segmented/--profile: skipped ({jax.device_count()} "
-                  f"devices < {args.workers} workers; set "
-                  f"XLA_FLAGS=--xla_force_host_platform_device_count="
+            print(f"--segmented/--profile/--stream: skipped "
+                  f"({jax.device_count()} devices < {args.workers} workers; "
+                  f"set XLA_FLAGS=--xla_force_host_platform_device_count="
                   f"{args.workers})")
             return
         mesh = jax.make_mesh((args.workers,), ("workers",))
@@ -259,6 +270,9 @@ def main():
 
     if args.profile:
         profile_segments(plan, sliced, params, mesh, x, ref)
+
+    if args.stream:
+        stream_report(plan, sliced, params, mesh, x, ref)
 
 
 def profile_segments(plan, sliced, params, mesh, x, ref):
@@ -311,6 +325,53 @@ def profile_segments(plan, sliced, params, mesh, x, ref):
           f"comm {tot['full'] - tot['nocomm']:.2f} "
           f"+ kernels {tot['nocomm'] - tot['assemble']:.2f} "
           f"+ assembly {tot['assemble']:.2f}")
+
+
+def stream_report(plan, sliced, params, mesh, x, ref):
+    """--stream satellite: buffer-depth sweep + overlap breakdown.
+
+    Builds the profiled segmented executor at ``buffer_depth`` 1, 2 and 4
+    and prints each depth's carry width, resident per-worker staging
+    footprint (counted once, not per fire), retire-copy volume (columns
+    moved home before a rotating frame is reused) and the summed
+    full/comm/kernel/assembly wall times over all segments.  Outputs are
+    bit-identical across depths, so the sweep is purely a cost trade:
+    depth >= 2 shrinks the carry (frames rotate instead of accumulating)
+    at the price of the retire copies."""
+    batch = x.shape[0]
+    print(f"{'depth':>5} {'width':>9} {'staging':>10} {'retire':>8} | "
+          f"{'full':>8} {'comm':>8} {'kern':>8} {'asm':>8}  (ms)")
+
+    def best(fn, *a, n=3):
+        jax.block_until_ready(fn(*a))  # warm-up = compile + 1st dispatch
+        b = None
+        for _ in range(n):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*a))
+            dt = time.perf_counter() - t0
+            b = dt if b is None else min(b, dt)
+        return b * 1e3
+
+    for depth in (1, 2, 4):
+        f = build_mpmd_executor(plan, sliced, params, mesh, batch=batch,
+                                segmented=True, profile=True,
+                                buffer_depth=depth)
+        err = float(jnp.abs(f(x) - ref).max())
+        assert err < 1e-4, f"depth {depth} diverged: {err:.2e}"
+        carry = f.initial_carry()
+        width = int(carry.shape[-1])
+        tot = {"full": 0.0, "nocomm": 0.0, "assemble": 0.0}
+        for fns in f.segment_fns:
+            for mode in tot:
+                tot[mode] += best(fns[mode], carry, x)
+            carry = jax.block_until_ready(fns["full"](carry, x))
+        st0 = f.segment_stats[0]
+        staging = st0["peak_staging_elems"] * 4 * batch
+        retire = sum(st["retire_elems"] for st in f.segment_stats)
+        print(f"{depth:>5} {width:>9} {staging / 1e6:>8.2f}MB {retire:>8} | "
+              f"{tot['full']:>8.2f} {tot['full'] - tot['nocomm']:>8.2f} "
+              f"{tot['nocomm'] - tot['assemble']:>8.2f} "
+              f"{tot['assemble']:>8.2f}")
 
 
 if __name__ == "__main__":

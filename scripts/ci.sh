@@ -17,13 +17,17 @@
 # smoke (a seeded Poisson trace with deadlines/backpressure through the
 # sliced-plan serving frontend while a campaign kills one worker and
 # straggles another mid-trace: zero request loss, dead + cordoned workers
-# out of the final fleet, seed-identical replay), and the trend gates
-# against the committed BENCH_sched.json —
-# 2x on scheduler/replan timings, 1.5x on sliced/grid transfer bytes and
-# fault-row migrated bytes (the DSH/ISH ratio bar needs the 2000-node
-# matrix and only runs in the full `make bench`).  The smoke run writes to
-# a scratch path so the committed baseline is only refreshed deliberately
-# (make bench).
+# out of the final fleet, seed-identical replay), the stream gate (the
+# buffer_depth sweep of benchmarks/stream_overlap.py: some depth >= 2
+# within the staging budget must sustain >= 1.2x depth-1 supersteps/s
+# through the serving frontend, or beat the absolute supersteps/s floor
+# that binds on 1-core hosts where the overlap cannot materialize), and
+# the trend gates against the committed BENCH_sched.json —
+# 2x on scheduler/replan timings, 1.5x on sliced/grid transfer bytes,
+# fault-row migrated bytes and stream-row peak staging bytes (the DSH/ISH
+# ratio bar needs the 2000-node matrix and only runs in the full
+# `make bench`).  The smoke run writes to a scratch path so the committed
+# baseline is only refreshed deliberately (make bench).
 #
 # Plan validation: tests/conftest.py wraps build_plan so validate_plan's
 # static-analysis pass (supplier liveness, register sizing/overlap, ring

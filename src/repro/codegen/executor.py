@@ -243,6 +243,7 @@ def build_mpmd_executor(
     span_coalesce: bool = True,
     cohort_rounds: bool = True,
     bake_params: bool = False,
+    buffer_depth: int = 1,
     profile: bool = False,
 ) -> Callable[[jax.Array], jax.Array]:
     """Compile the plan into a jitted shard_map function ``f(x) -> y``.
@@ -277,7 +278,18 @@ def build_mpmd_executor(
     equivalence oracle for the segmented one.  ``span_coalesce`` /
     ``cohort_rounds`` / ``bake_params`` (segmented only) are ablation
     knobs for the span-assembly, cohort-round and constant-parameter fast
-    paths — outputs are bit-identical with them on or off; ``profile=True`` additionally exposes per-segment
+    paths — outputs are bit-identical with them on or off.
+    ``buffer_depth`` (segmented only; default 1 = write-once staging)
+    selects the **streaming** mode at 2/4: comm payloads land in that many
+    rotating staging frames (double/quad buffering — superstep ``k+1``'s
+    ``ppermute`` fires land while tick ``k``'s deliveries are still being
+    read), still-live frame occupants are retired to their packed columns
+    before reuse, and the packed carry is **donated** across calls
+    (``donate_argnums`` + in-trace re-init) instead of re-materialized.
+    Outputs — and checkpoint snapshots' register region — are
+    bit-identical across depths; the carry width stops growing with the
+    plan's fire count and is bounded by ``buffer_depth`` × the largest
+    per-tick payload.  ``profile=True`` additionally exposes per-segment
     jitted functions and static stats for the runtime breakdown
     (``examples/schedule_sliced.py --profile``).
 
@@ -312,6 +324,17 @@ def build_mpmd_executor(
             "executor carries the packed register buffer that superstep "
             "snapshots are defined over"
         )
+    if not (isinstance(buffer_depth, int) and buffer_depth >= 1):
+        raise ValueError(
+            f"buffer_depth must be a positive int (1 = write-once staging, "
+            f"2/4 = double/quad-buffered streaming), got {buffer_depth!r}"
+        )
+    if buffer_depth != 1 and not segmented:
+        raise ValueError(
+            "buffer_depth >= 2 requires segmented=True: only the segmented "
+            "executor stages comm payloads in the packed carry that the "
+            "rotating frames double/quad-buffer"
+        )
     if coalesce:
         plan = coalesce_transfer_steps(plan)
     if segmented:
@@ -319,7 +342,7 @@ def build_mpmd_executor(
             plan, model, params, mesh, axis, batch, liveness,
             checkpoint=checkpoint, span_coalesce=span_coalesce,
             cohort_rounds=cohort_rounds, bake_params=bake_params,
-            profile=profile,
+            buffer_depth=buffer_depth, profile=profile,
         )
 
     reg_names = [l.name for l in model.layers]
@@ -460,6 +483,18 @@ def build_mpmd_executor(
     return _with_batch_check(jax.jit(fn), batch)
 
 
+def _check_batch(x, batch: int) -> None:
+    """Eager batch-dimension check shared by the executor wrappers."""
+    lead = x.shape[0] if getattr(x, "ndim", 0) else None
+    if lead != batch:
+        raise ValueError(
+            f"this executor was built for batch={batch} (baked into its "
+            f"register layout) but the input has leading dimension "
+            f"{lead}; rebuild with build_mpmd_executor(..., "
+            f"batch={lead})"
+        )
+
+
 def _with_batch_check(
     jitted, batch: int, extra_args: Tuple = ()
 ) -> Callable[[jax.Array], jax.Array]:
@@ -471,23 +506,62 @@ def _with_batch_check(
     exposes ``.lower`` (used by the trace benchmarks) with the same check.
     """
 
-    def check(x) -> None:
-        lead = x.shape[0] if getattr(x, "ndim", 0) else None
-        if lead != batch:
-            raise ValueError(
-                f"this executor was built for batch={batch} (baked into its "
-                f"register layout) but the input has leading dimension "
-                f"{lead}; rebuild with build_mpmd_executor(..., "
-                f"batch={lead})"
-            )
-
     def run(x: jax.Array) -> jax.Array:
-        check(x)
+        _check_batch(x, batch)
         return jitted(x, *extra_args)
 
     def lower(x: jax.Array):
-        check(x)
+        _check_batch(x, batch)
         return jitted.lower(x, *extra_args)
+
+    run.lower = lower
+    return run
+
+
+def _with_carry_feedback(
+    jitted, batch: int, carry_shape: Tuple[int, int, int], seg_tables,
+    checkpoint: bool,
+) -> Callable[[jax.Array], jax.Array]:
+    """Streaming-executor wrapper: donate the packed carry across calls.
+
+    The jitted executor takes the previous call's final carry as a donated
+    argument (``donate_argnums``) and re-initializes the register region
+    in-trace, so XLA updates the packed registers and rotating staging
+    frames in place instead of materializing a fresh buffer every call.
+    The wrapper owns the fed-back carry and hides the plumbing: the public
+    signature stays ``f(x) -> y`` (or ``(y, snaps)`` under checkpoint),
+    exactly like the write-once executor.  Backends without donation
+    support just fall back to copying — the ignored-donation warning is
+    suppressed because outputs never depend on the incoming carry's bytes.
+    """
+    import warnings
+
+    state = {"carry": None}
+
+    def fresh():
+        return jnp.zeros(carry_shape, jnp.float32)
+
+    def run(x: jax.Array):
+        _check_batch(x, batch)
+        c = state["carry"]
+        if c is None:
+            c = fresh()
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message=".*[Dd]onat.*", category=UserWarning
+            )
+            out = jitted(x, c, seg_tables)
+        if checkpoint:
+            y, carry, snaps = out
+            state["carry"] = carry
+            return y, snaps
+        y, carry = out
+        state["carry"] = carry
+        return y
+
+    def lower(x: jax.Array):
+        _check_batch(x, batch)
+        return jitted.lower(x, fresh(), seg_tables)
 
     run.lower = lower
     return run
@@ -503,6 +577,7 @@ def executed_comm_bytes(
     segmented: bool = False,
     liveness: bool = True,
     cohort_rounds: bool = True,
+    buffer_depth: int = 1,
 ) -> float:
     """Exact payload bytes the executors' collectives ship.
 
@@ -519,6 +594,11 @@ def executed_comm_bytes(
     entries gather from and scatter into the dump column, shipping no
     register data — so the total is exactly ``plan.comm_bytes`` scaled by
     ``batch * dtype_bytes`` / producer-bytes, whatever the cohort shapes.
+    ``buffer_depth`` only relocates where a payload *lands* (write-once
+    strip vs rotating frame): every delivery is counted exactly once here
+    whatever the depth — the streaming executor's extra retire copies are
+    local buffer moves, not shipped bytes — so the byte parity with
+    ``plan.comm_bytes`` holds at every depth.
     """
     if coalesce:
         plan = coalesce_transfer_steps(plan)
@@ -535,6 +615,7 @@ def executed_comm_bytes(
         pad = total  # stand-in dump column; positions are in [0, total)
         segments = build_segments(
             plan, reg_shapes, offsets, pad_index=pad,
+            buffer_depth=buffer_depth,
             **({} if cohort_rounds else {"cohort_ratio": None}),
         )
         real = 0
@@ -629,6 +710,31 @@ def _take_row(a: jax.Array, i: jax.Array) -> jax.Array:
         slice_sizes=(1, *a.shape[1:]),
         mode=jax.lax.GatherScatterMode.PROMISE_IN_BOUNDS,
     )
+
+
+def _waterfill(loads: np.ndarray, lo: int, hi: int, n: int) -> np.ndarray:
+    """Split ``n`` units across slots ``loads[lo:hi+1]`` minimizing the
+    resulting per-slot maximum (the counts are returned, ``loads`` is not
+    mutated).  Used to flatten retire bursts over their safe scheduling
+    windows: the scan body pads every tick to the widest per-tick retire
+    table, so the cost of retirement is the *max* load, not the sum."""
+    win = np.asarray(loads[lo:hi + 1], np.int64)
+    level_lo, level_hi = int(win.min()), int(win.max()) + n
+    while level_lo < level_hi:
+        mid = (level_lo + level_hi) // 2
+        if int(np.maximum(0, mid - win).sum()) >= n:
+            level_hi = mid
+        else:
+            level_lo = mid + 1
+    add = np.maximum(0, level_lo - win)
+    excess = int(add.sum()) - n
+    for i in range(len(add)):
+        if excess <= 0:
+            break
+        take = min(excess, int(add[i]))
+        add[i] -= take
+        excess -= take
+    return add
 
 
 def _make_branch(
@@ -754,6 +860,7 @@ def _build_segmented(
     span_coalesce: bool = True,
     cohort_rounds: bool = True,
     bake_params: bool = False,
+    buffer_depth: int = 1,
     profile: bool = False,
 ) -> Callable[[jax.Array], jax.Array]:
     """Segmented lax.scan lowering of a (coalesced) plan.
@@ -771,7 +878,17 @@ def _build_segmented(
     (everything else element-gathers — the pre-span layout);
     ``cohort_rounds=False`` pads every ring round to the segment max (the
     pre-cohort layout).  Both are ablation/debug knobs: outputs are
-    bit-identical across them.  ``profile=True`` additionally exposes
+    bit-identical across them.
+
+    ``buffer_depth >= 2`` is the **streaming** mode: comm payloads land in
+    that many rotating staging frames (``SegmentStaging``) instead of
+    write-once strips, per-tick retire tables copy a frame's still-live
+    occupants back to their packed columns before reuse, and the jitted
+    executor takes the previous call's final carry as a **donated**
+    argument (``donate_argnums``) re-initialized in-trace — so the packed
+    registers and staging frames are updated in place across calls instead
+    of re-materialized.  Outputs, and ``checkpoint`` snapshots' register
+    region, are bit-identical to depth 1.  ``profile=True`` additionally exposes
     ``.segment_fns`` (per-segment jitted callables over the stacked carry,
     in ``full`` / ``nocomm`` / ``assemble`` modes) and ``.segment_stats``
     (static span/round tables) for the per-segment runtime breakdown.
@@ -820,74 +937,55 @@ def _build_segmented(
     dump_col = total + zrun + nrun
     segments = build_segments(
         plan, reg_shapes, offsets, pad_index=dump_col,
+        buffer_depth=buffer_depth,
         **({} if cohort_rounds else {"cohort_ratio": None}),
     )
 
-    # staging layout: every comm round lands its payload in a private
-    # staging strip via an in-place dynamic_update_slice instead of an
-    # element scatter (scatter costs scale per element on CPU; an
-    # in-place DUS is a memcpy).  Each *fire* of a round gets its own
-    # strip — delivered values are never clobbered by a later fire — and
-    # strips are allocated tick-major, so one tick's fires form a single
-    # contiguous block: the runtime ships a whole tick's rounds through
-    # one **pattern switch** (one branch per distinct active-round set,
+    # staging layout (plan-side, ``SegmentStaging``): every comm round
+    # lands its payload in a staging strip via an in-place
+    # dynamic_update_slice instead of an element scatter (scatter costs
+    # scale per element on CPU; an in-place DUS is a memcpy).  Strips are
+    # allocated tick-major, so one tick's fires form a single contiguous
+    # block: the runtime ships a whole tick's rounds through one
+    # **pattern switch** (one branch per distinct active-round set,
     # executing exactly its fires, no per-round idle conds) and lands the
     # concatenated payload with one DUS at the tick's block base.
+    # ``buffer_depth == 1`` gives every fire a private write-once strip;
+    # ``buffer_depth >= 2`` rotates the landing blocks over that many
+    # frames, and the schedule walk below emits per-tick **retire
+    # tables** copying a frame's still-live occupants back to their
+    # packed register columns just before the frame is reused.
     # Consumers of delivered values read the strips directly: the
     # per-occurrence gather tables are statically redirected through a
     # per-worker "home" map maintained by the build-time schedule walk
     # below, so no runtime receive-side indexing exists at all.
-    seg_acts = []
-    seg_soffs = []
-    seg_bases = []
     seg_patterns = []
     seg_patids = []
-    stage_off = dump_col + 1
-    tail_need = 0
     for seg in segments:
         n_ticks = len(seg.ticks)
-        act_np = (
-            np.stack(
-                [(np.asarray(r.slot) != 0).any(axis=1) for r in seg.rounds],
-                axis=1,
-            )
-            if seg.rounds else np.zeros((n_ticks, 0), bool)
-        )  # (n_ticks, n_rounds)
-        soff = np.zeros((n_ticks, len(seg.rounds)), np.int32)
-        base = np.zeros(n_ticks, np.int32)
+        act_np = seg.stage.act
         patterns: List[Tuple[int, ...]] = []
         pat_index: Dict[Tuple[int, ...], int] = {}
         pat_ids = np.zeros(n_ticks, np.int32)
         for t in range(n_ticks):
-            base[t] = stage_off
             key = tuple(np.nonzero(act_np[t])[0].tolist())
             pid = pat_index.setdefault(key, len(pat_index))
             if pid == len(patterns):
                 patterns.append(key)
             pat_ids[t] = pid
-            for r_i in key:
-                soff[t, r_i] = stage_off
-                stage_off += seg.rounds[r_i].length
-        lmax = max(
-            [0] + [sum(seg.rounds[r].length for r in p) for p in patterns]
-        )
-        # idle-pattern tails read/write ``lmax`` columns past their tick's
-        # block base — make sure that stays in bounds for trailing ticks
-        tail_need = max(tail_need, (int(base.max()) + lmax) if n_ticks else 0)
-        seg_acts.append(act_np)
-        seg_soffs.append(soff)
-        seg_bases.append(base)
         seg_patterns.append(tuple(patterns))
         seg_patids.append(pat_ids)
     # the uniform-width output write needs `start + wseg <= width` for
-    # every output offset (starts never exceed `total`)
+    # every output offset (starts never exceed `total`); the staging
+    # extent already covers every tick block plus its read-back tail
     wmax = max(
         [1] + [
             reg_sizes[n]
             for seg in segments for row in seg.ticks for n in row if n
         ]
     )
-    width = max(stage_off, total + wmax, tail_need)
+    stage_end = segments[0].stage.stage_end if segments else dump_col + 1
+    width = max(stage_end, total + wmax)
 
     sig_cache: Dict[str, Tuple] = {}
 
@@ -926,16 +1024,34 @@ def _build_segmented(
         return out
 
     seg_meta = []     # (sig_list, sig_infos, deltas, lengths, single,
-                      #  patterns, lmax, wseg, idle_st)
+                      #  patterns, lmax, wseg, idle_st, has_ret)
     seg_tables = []   # per segment: pytree of jnp operand tables (jit args)
     seg_stats = []    # per segment: static span/round statistics
+    # rotating-frame occupancy (buffer_depth >= 2): per frame, the
+    # (worker, packed cols, strip cols) records of deliveries currently
+    # living there.  When a shipping tick reuses a frame, every record
+    # still current in ``home`` is retired — copied back to its packed
+    # register columns by the tick's retire table, just before the
+    # landing DUS clobbers the frame.  Retiring is always
+    # semantics-preserving (the packed column is reserved until the
+    # value's death, and the runner materializes deliveries there
+    # anyway), so no liveness analysis is needed: over-retiring a dead
+    # value writes a column nothing will read again.
+    frame_occ: List[List[Tuple[int, np.ndarray, np.ndarray]]] = [
+        [] for _ in range(buffer_depth)
+    ]
     for seg_i, seg in enumerate(segments):
         n_ticks = len(seg.ticks)
-        act_np = seg_acts[seg_i]
-        soff = seg_soffs[seg_i]
+        act_np = seg.stage.act
+        soff = seg.stage.soff
         patterns = seg_patterns[seg_i]
         round_rows = [np.asarray(r.rows) for r in seg.rounds]
         round_slots = [np.asarray(r.slot) for r in seg.rounds]
+        # (worker, strip cols, packed cols, window lo, window hi): retire
+        # chunks with the tick range each copy may legally run in
+        ret_chunks: List[
+            Tuple[int, np.ndarray, np.ndarray, int, int]
+        ] = []
         sig_list: List = []
         sig_index: Dict = {}
         occs: List[Dict] = []
@@ -967,6 +1083,27 @@ def _build_segmented(
                 off_n, sz_n = offsets[node], reg_sizes[node]
                 home[w, off_n:off_n + sz_n] = ident[off_n:off_n + sz_n]
                 pos2node[off_n:off_n + sz_n] = nid_of(node)
+            if buffer_depth > 1 and seg.stage.payloads[t]:
+                # this shipping tick reuses rotating frame ``fr``: retire
+                # its still-current occupants to their packed columns
+                # (compute at this tick already resolved its gathers
+                # against the strips — the runtime retire copy runs
+                # after the kernel write, before the landing DUS)
+                fr = int(seg.stage.frame_of[t])
+                for (w, pcs, scs, d_seg, d_t) in frame_occ[fr]:
+                    valid = home[w, pcs] == scs
+                    if valid.any():
+                        # a pair still current now was current ever since
+                        # its delivery (``home`` entries are only touched
+                        # by delivery, compute reuse, and retirement), so
+                        # the copy may run at any tick after the strip
+                        # landed and no later than this one
+                        lo = d_t + 1 if d_seg == seg_i else 0
+                        ret_chunks.append(
+                            (w, scs[valid], pcs[valid], min(lo, t), t)
+                        )
+                        home[w, pcs[valid]] = pcs[valid]
+                frame_occ[fr] = []
             for r_i, r in enumerate(seg.rounds):
                 if not act_np[t, r_i]:
                     continue
@@ -983,8 +1120,13 @@ def _build_segmented(
                             "staged comm: sender would forward a value it "
                             "received rather than produced"
                         )
-                    home[w, cols] = strip + real.astype(np.int32)
+                    strips = strip + real.astype(np.int32)
+                    home[w, cols] = strips
                     owner[w, cols] = pos2node[cols]
+                    if buffer_depth > 1:
+                        frame_occ[int(seg.stage.frame_of[t])].append(
+                            (w, np.asarray(cols, np.int32), strips, seg_i, t)
+                        )
         sig_tabs = []
         sig_infos = []
         span_elems = gather_elems = 0
@@ -1076,9 +1218,52 @@ def _build_segmented(
             # comm pattern switch dispatches on the id (tick data,
             # identical on every worker — all workers take the same
             # branch, so each branch's collectives stay matched)
-            xs["base"] = jnp.asarray(seg_bases[seg_i])
+            xs["base"] = jnp.asarray(seg.stage.base)
             if len(patterns) > 1:
                 xs["pat"] = jnp.asarray(seg_patids[seg_i])
+        # per-tick retire tables (rotating frames only): dst-sorted
+        # (strip, packed) column pairs per worker, dump-padded to the
+        # segment max — one gather + one sorted scatter per tick moves a
+        # reused frame's surviving occupants home.  The scan body pads
+        # every tick to the segment's widest retire, so eviction bursts
+        # are first water-filled backward across their safe windows
+        # (delivery + 1 .. eviction), flattening the per-tick maximum
+        # toward the mean instead of the burst size.
+        ret_by_tw: Dict[Tuple[int, int], List[Tuple[np.ndarray, np.ndarray]]]
+        ret_by_tw = {}
+        if ret_chunks:
+            loads = np.zeros((n_ticks, m), np.int64)
+            for (w, scs, pcs, lo, hi) in ret_chunks:
+                counts = _waterfill(loads[:, w], lo, hi, len(scs))
+                off = 0
+                for t_r, c in zip(range(lo, hi + 1), counts):
+                    c = int(c)
+                    if not c:
+                        continue
+                    ret_by_tw.setdefault((t_r, w), []).append(
+                        (scs[off:off + c], pcs[off:off + c])
+                    )
+                    loads[t_r, w] += c
+                    off += c
+        retire_elems = 0
+        ret_k = max(
+            [0] + [
+                sum(len(s) for (s, _d) in chunks)
+                for chunks in ret_by_tw.values()
+            ]
+        )
+        if ret_k:
+            ret_src = np.full((n_ticks, m, ret_k), dump_col, np.int32)
+            ret_dst = np.full((n_ticks, m, ret_k), dump_col, np.int32)
+            for (t, w), chunks in ret_by_tw.items():
+                scs = np.concatenate([s for (s, _d) in chunks])
+                pcs = np.concatenate([d for (_s, d) in chunks])
+                order = np.argsort(pcs, kind="stable")
+                ret_src[t, w, : len(scs)] = scs[order]
+                ret_dst[t, w, : len(pcs)] = pcs[order]
+                retire_elems += len(pcs)
+            xs["rsrc"] = jnp.asarray(ret_src)
+            xs["rdst"] = jnp.asarray(ret_dst)
         # barrier materialization (checkpoint runs only): copy every
         # staged delivery back to its packed column, so snapshots stay
         # bit-equivalent to the reference runner's barrier state (which
@@ -1104,7 +1289,7 @@ def _build_segmented(
         seg_meta.append((
             sig_list, sig_infos, tuple(r.delta for r in seg.rounds),
             tuple(r.length for r in seg.rounds), single, patterns,
-            lmax, wseg, idle_st,
+            lmax, wseg, idle_st, bool(ret_k),
         ))
         seg_tables.append({
             "xs": xs,
@@ -1132,6 +1317,12 @@ def _build_segmented(
                 int(act_np[:, r_i].sum()) * r.length
                 for r_i, r in enumerate(seg.rounds)
             )),
+            # resident staging footprint (global, counted once — NOT per
+            # fire): write-once strips for depth 1, depth * frame for the
+            # rotating layout; plus the retire traffic rotation adds
+            "buffer_depth": buffer_depth,
+            "peak_staging_elems": int(stage_end - (dump_col + 1)),
+            "retire_elems": retire_elems,
             "span_elems": span_elems,
             "gather_elems": gather_elems,
             "span_coverage": (
@@ -1158,7 +1349,7 @@ def _build_segmented(
         skipped), ``"assemble"`` (input assembly only — profiling)."""
         wid = jax.lax.axis_index(axis)
         (sig_list, sig_infos, deltas, lengths, single, patterns,
-         lmax, wseg, idle_st) = meta
+         lmax, wseg, idle_st, has_ret) = meta
         br_mode = "assemble" if mode == "assemble" else "full"
 
         def idle(b, oc):
@@ -1188,6 +1379,15 @@ def _build_segmented(
             b = jax.lax.dynamic_update_slice_p.bind(b, y, np.int32(0), st)
             if not comm or not deltas:
                 return b, None
+            if has_ret:
+                # rotating frames: move the reused frame's surviving
+                # occupants back to their packed columns before this
+                # tick's landing DUS clobbers them (pad lanes shuttle
+                # the dump column's don't-care bytes)
+                b = _scatter_cols(
+                    b, _take_row(tk["rdst"], wid),
+                    _gather_cols(b, _take_row(tk["rsrc"], wid)),
+                )
 
             # comm pattern switch: each branch executes exactly the ring
             # rounds active on its ticks — worker w ships to w + delta,
@@ -1246,9 +1446,7 @@ def _build_segmented(
             buf, jnp.full((batch, nrun), -jnp.inf), (0, neginf_base)
         )
 
-    def worker_fn(x: jax.Array, tables):
-        wid = jax.lax.axis_index(axis)
-        buf = init_buf()
+    def _run_all(x: jax.Array, buf: jax.Array, tables, wid):
         snaps: List[jax.Array] = []
         for meta, tabs in zip(seg_meta, tables):
             buf = run_segment(buf, x, meta, tabs)
@@ -1268,21 +1466,68 @@ def _build_segmented(
         )
         out = jnp.where(wid == plan.sink_worker, out, 0.0)
         out = jax.lax.psum(out, axis)
+        return out, buf, snaps
+
+    def worker_fn(x: jax.Array, tables):
+        wid = jax.lax.axis_index(axis)
+        out, _buf, snaps = _run_all(x, init_buf(), tables, wid)
         if checkpoint:
             # (n_segments, 1, batch, width) per worker; the worker axis is
             # concatenated by shard_map into (n_segments, m, batch, width)
             return out, jnp.stack(snaps)[:, None]
         return out
 
+    def worker_fn_stream(x: jax.Array, carry, tables):
+        # streaming (buffer_depth >= 2): the previous call's final carry
+        # arrives as a donated argument and is re-initialized in place —
+        # zero the register + zero-sentinel prefix, rewrite the -inf
+        # block.  Staging columns keep the previous call's bytes: every
+        # strip is written before it is read within a call, and idle-tick
+        # tails are value-preserving read-backs, so XLA aliases the
+        # donated buffer instead of materializing a fresh one.
+        wid = jax.lax.axis_index(axis)
+        b = jax.lax.squeeze(carry, (0,))
+        b = jax.lax.dynamic_update_slice_p.bind(
+            b, jnp.zeros((batch, neginf_base), jnp.float32),
+            np.int32(0), np.int32(0),
+        )
+        b = jax.lax.dynamic_update_slice_p.bind(
+            b, jnp.full((batch, nrun), -jnp.inf),
+            np.int32(0), np.int32(neginf_base),
+        )
+        out, b, snaps = _run_all(x, b, tables, wid)
+        b = jax.lax.expand_dims(b, (0,))
+        if checkpoint:
+            return out, b, jnp.stack(snaps)[:, None]
+        return out, b
+
     p_rep = jax.sharding.PartitionSpec()
-    out_specs = (
-        (p_rep, jax.sharding.PartitionSpec(None, axis))
-        if checkpoint else p_rep
-    )
-    fn = _shard_map(
-        worker_fn, mesh=mesh, in_specs=(p_rep, p_rep), out_specs=out_specs
-    )
-    wrapped = _with_batch_check(jax.jit(fn), batch, extra_args=(seg_tables,))
+    if buffer_depth == 1:
+        out_specs = (
+            (p_rep, jax.sharding.PartitionSpec(None, axis))
+            if checkpoint else p_rep
+        )
+        fn = _shard_map(
+            worker_fn, mesh=mesh, in_specs=(p_rep, p_rep),
+            out_specs=out_specs,
+        )
+        wrapped = _with_batch_check(
+            jax.jit(fn), batch, extra_args=(seg_tables,)
+        )
+    else:
+        p_carry = jax.sharding.PartitionSpec(axis)
+        out_specs = (
+            (p_rep, p_carry, jax.sharding.PartitionSpec(None, axis))
+            if checkpoint else (p_rep, p_carry)
+        )
+        fn = _shard_map(
+            worker_fn_stream, mesh=mesh,
+            in_specs=(p_rep, p_carry, p_rep), out_specs=out_specs,
+        )
+        wrapped = _with_carry_feedback(
+            jax.jit(fn, donate_argnums=(1,)), batch,
+            (m, batch, width), seg_tables, checkpoint,
+        )
     wrapped.layout = RegisterLayout(
         offsets=offsets, total=total,
         shapes={n: reg_shapes[n] for n in offsets},

@@ -29,7 +29,11 @@ a plan in the uniform shape the segmented ``lax.scan`` executor needs:
   dump column *past every register* (padding lanes gather that column's
   don't-care bytes and scatter back into it), so padding can never touch a
   real register or change a shipped window, which
-  :mod:`tests.test_scan_executor` asserts as a property.
+  :mod:`tests.test_scan_executor` asserts as a property.  Each segment also
+  carries a :class:`SegmentStaging` placing every tick's landed payload
+  block — write-once strips (``buffer_depth=1``) or ``buffer_depth``
+  rotating frames whose occupants the executor retires back to their
+  packed columns before reuse (the streaming double/quad-buffer layout).
 """
 from __future__ import annotations
 
@@ -53,6 +57,7 @@ __all__ = [
     "build_segments",
     "CommRound",
     "PlanSegment",
+    "SegmentStaging",
     "RegisterLayout",
     "migrate_registers",
     "WCETCertificate",
@@ -714,13 +719,60 @@ class CommRound:
 
 
 @dataclasses.dataclass(frozen=True)
+class SegmentStaging:
+    """Staging-strip allocation of one segment's comm payload blocks.
+
+    Every tick's active ring rounds land their concatenated payload as one
+    ``dynamic_update_slice`` block in the packed carry past the dump
+    column; this layout decides *where*.  ``buffer_depth == 1`` is the
+    write-once layout: every shipping tick gets a private strip, allocated
+    tick-major across the whole plan, so delivered values are never
+    clobbered (carry width grows with the total fire count).
+    ``buffer_depth >= 2`` is the **streaming** layout: ``buffer_depth``
+    rotating frames of ``frame_elems`` columns each (the largest per-tick
+    payload anywhere in the plan), and shipping tick ``g`` (globally
+    counted) lands in frame ``g % buffer_depth`` — superstep ``k+1``'s
+    fires land while tick ``k``'s deliveries are still being consumed, and
+    a frame is only reclaimed ``buffer_depth`` shipping ticks later, when
+    the executor has retired its still-live occupants back to their packed
+    register columns.  Staging memory is then bounded by
+    ``buffer_depth * frame_elems`` instead of the total fire count.
+
+    All columns are absolute packed-buffer positions: ``stage_base`` is the
+    first staging column (``pad_index + 1``), ``stage_end`` the first
+    column past the staging region (covers every tick's block plus its
+    self-restoring tail).  Idle ticks of a rounds-bearing segment point
+    their (value-preserving) read-back block at ``stage_base``.
+    """
+
+    buffer_depth: int
+    stage_base: int
+    frame_elems: int     # rotating frame width (0 when buffer_depth == 1)
+    stage_end: int
+    act: np.ndarray      # (n_ticks, n_rounds) bool — round fires at tick
+    soff: np.ndarray     # (n_ticks, n_rounds) int32 — round's strip column
+    base: np.ndarray     # (n_ticks,) int32 — tick's payload block base
+    payloads: np.ndarray  # (n_ticks,) int32 — total active length per tick
+    frame_of: np.ndarray  # (n_ticks,) int32 — rotating frame id (-1 idle
+    #                       tick or buffer_depth == 1)
+
+    @property
+    def lmax(self) -> int:
+        """Widest per-tick payload block (the pattern-switch pad width)."""
+        return int(self.payloads.max()) if self.payloads.size else 0
+
+
+@dataclasses.dataclass(frozen=True)
 class PlanSegment:
     """A run of supersteps lowered to one uniform scan schema.
 
     ``ticks[t][w]`` is the node worker ``w`` computes at tick ``t`` (``None``
     = idle); each superstep contributes ``max_w len(compute[w])`` ticks (at
     least one) and its comm round fires on the step's final tick.  ``rounds``
-    is the segment's fixed set of ring rounds (see :class:`CommRound`).
+    is the segment's fixed set of ring rounds (see :class:`CommRound`);
+    ``stage`` places each tick's landed payload block in the packed carry
+    (see :class:`SegmentStaging` — write-once or rotating, by
+    ``buffer_depth``).
     """
 
     start: int   # first plan superstep (inclusive)
@@ -728,6 +780,7 @@ class PlanSegment:
     ticks: Tuple[Tuple[Optional[str], ...], ...]
     step_of_tick: Tuple[int, ...]
     rounds: Tuple[CommRound, ...]
+    stage: Optional[SegmentStaging] = None
 
 
 def _box_positions(
@@ -778,6 +831,7 @@ def build_segments(
     pad_index: int,
     split_ratio: float = 16.0,
     cohort_ratio: Optional[float] = 4.0,
+    buffer_depth: int = 1,
 ) -> List[PlanSegment]:
     """Canonicalize ``plan`` into uniformly-shaped :class:`PlanSegment`\\ s.
 
@@ -801,7 +855,18 @@ def build_segments(
     time instead of surviving as runtime ``lax.cond``-skipped rounds:
     every emitted round has ``length >= 1`` and at least one active
     ``(tick, dst)`` cell.
+
+    ``buffer_depth`` selects the staging layout attached as each segment's
+    ``stage`` (see :class:`SegmentStaging`): 1 (default) is the write-once
+    tick-major allocation, 2/4 double/quad-buffer the comm landing area as
+    rotating frames so staging memory stays bounded and superstep ``k+1``'s
+    fires can land under tick ``k``'s still-pending reads.
     """
+    if not (isinstance(buffer_depth, int) and buffer_depth >= 1):
+        raise ValueError(
+            f"buffer_depth must be a positive int (1 = write-once staging, "
+            f">= 2 = rotating frames), got {buffer_depth!r}"
+        )
     m = plan.n_workers
     per_step = []
     for i, step in enumerate(plan.steps):
@@ -904,7 +969,93 @@ def build_segments(
             ticks=tuple(ticks), step_of_tick=tuple(step_of_tick),
             rounds=tuple(rounds),
         ))
-    return segments
+    return _allocate_staging(segments, pad_index, buffer_depth)
+
+
+def _allocate_staging(
+    segments: List[PlanSegment], pad_index: int, buffer_depth: int
+) -> List[PlanSegment]:
+    """Attach a :class:`SegmentStaging` to every segment.
+
+    Pass 1 derives each segment's per-tick active-round mask and payload
+    totals (a round fires at a tick iff any destination holds a non-pad
+    slot row there); pass 2 assigns every shipping tick's landing block —
+    monotonically for ``buffer_depth == 1`` (write-once strips, the
+    frame_elems-free layout whose width grows with the plan's fire count)
+    or round-robin over ``buffer_depth`` frames sized to the globally
+    largest tick payload.  The executor consumes these columns verbatim,
+    so the allocation — not the executor walk — is the single source of
+    truth for where delivered values live.
+    """
+    stage_base = pad_index + 1
+    acts: List[np.ndarray] = []
+    pays: List[np.ndarray] = []
+    for seg in segments:
+        n_ticks = len(seg.ticks)
+        act = (
+            np.stack(
+                [(np.asarray(r.slot) != 0).any(axis=1) for r in seg.rounds],
+                axis=1,
+            )
+            if seg.rounds else np.zeros((n_ticks, 0), bool)
+        )
+        lens = np.asarray([r.length for r in seg.rounds], np.int64)
+        pay = (
+            (act * lens[None, :]).sum(axis=1).astype(np.int32)
+            if seg.rounds else np.zeros(n_ticks, np.int32)
+        )
+        acts.append(act)
+        pays.append(pay)
+    frame_elems = (
+        max([0] + [int(p.max()) for p in pays if p.size])
+        if buffer_depth > 1 else 0
+    )
+    out: List[PlanSegment] = []
+    off = stage_base   # next write-once strip (buffer_depth == 1)
+    g = 0              # global shipping-tick counter (buffer_depth >= 2)
+    tail_end = stage_base
+    for seg, act, pay in zip(segments, acts, pays):
+        n_ticks = len(seg.ticks)
+        soff = np.zeros((n_ticks, len(seg.rounds)), np.int32)
+        base = np.full(n_ticks, stage_base, np.int32)
+        frame_of = np.full(n_ticks, -1, np.int32)
+        lmax = int(pay.max()) if pay.size else 0
+        for t in range(n_ticks):
+            if buffer_depth == 1:
+                base[t] = off
+                for r_i in np.nonzero(act[t])[0]:
+                    soff[t, r_i] = off
+                    off += seg.rounds[r_i].length
+            elif pay[t]:
+                frame_of[t] = g % buffer_depth
+                base[t] = stage_base + frame_of[t] * frame_elems
+                g += 1
+                o = int(base[t])
+                for r_i in np.nonzero(act[t])[0]:
+                    soff[t, r_i] = o
+                    o += seg.rounds[r_i].length
+            # idle ticks of a rounds-bearing segment read back (and
+            # rewrite unchanged) lmax columns at their base — keep that
+            # block in bounds
+            tail_end = max(tail_end, int(base[t]) + lmax)
+        out.append(dataclasses.replace(seg, stage=SegmentStaging(
+            buffer_depth=buffer_depth,
+            stage_base=stage_base,
+            frame_elems=frame_elems,
+            stage_end=0,  # patched below once the global extent is known
+            act=act, soff=soff, base=base, payloads=pay, frame_of=frame_of,
+        )))
+    stage_end = max(
+        tail_end,
+        off if buffer_depth == 1
+        else stage_base + buffer_depth * frame_elems,
+    )
+    return [
+        dataclasses.replace(
+            s, stage=dataclasses.replace(s.stage, stage_end=stage_end)
+        )
+        for s in out
+    ]
 
 
 def plan_summary(plan: ExecutionPlan, dag: DAG) -> Dict[str, object]:

@@ -194,6 +194,14 @@ def _check_segments(
 ) -> None:
     pad = layout.total + 2  # the executor's dump column
     segments = build_segments(plan, layout.shapes, layout.offsets, pad_index=pad)
+    for depth in (1, 2, 4):
+        _check_staging(
+            build_segments(
+                plan, layout.shapes, layout.offsets, pad_index=pad,
+                buffer_depth=depth,
+            ),
+            pad, depth,
+        )
     spans = [(s.start, s.stop) for s in segments]
     if spans and (spans[0][0] != 0 or spans[-1][1] != len(plan.steps)):
         _fail(f"segments {spans} do not cover supersteps [0, {len(plan.steps)})")
@@ -267,6 +275,106 @@ def _check_segments(
                     f"same tick (cohorts must partition a delta's ticks)"
                 )
             by_delta[r.delta] = active if prev is None else (prev | active)
+
+
+def _check_staging(segments, pad: int, depth: int) -> None:
+    """Staging-layout invariants of :class:`SegmentStaging` at one depth.
+
+    Write-once (``depth == 1``): every shipping tick's strips are
+    allocated tick-major without overlap, so no delivered value is ever
+    clobbered.  Rotating (``depth >= 2``): frames are sized to the
+    globally largest tick payload, shipping ticks rotate frames
+    round-robin (a frame is reused no sooner than ``depth`` shipping
+    ticks later — the slack the executor's retire tables rely on), and
+    every block plus its read-back tail stays inside the staging region.
+    """
+    stage_base = pad + 1
+    glob_pay = 0
+    for seg in segments:
+        st = seg.stage
+        if st is None:
+            _fail(f"segment [{seg.start},{seg.stop}) has no staging layout")
+        if st.buffer_depth != depth or st.stage_base != stage_base:
+            _fail(
+                f"staging header mismatch: depth {st.buffer_depth} vs "
+                f"{depth}, base {st.stage_base} vs {stage_base}"
+            )
+        lens = np.asarray([r.length for r in seg.rounds], np.int64)
+        act = np.stack(
+            [(np.asarray(r.slot) != 0).any(axis=1) for r in seg.rounds],
+            axis=1,
+        ) if seg.rounds else np.zeros((len(seg.ticks), 0), bool)
+        if st.act.shape != act.shape or (st.act != act).any():
+            _fail("staging active-round mask disagrees with round slots")
+        pay = (act * lens[None, :]).sum(axis=1) if seg.rounds else (
+            np.zeros(len(seg.ticks), np.int64)
+        )
+        if (st.payloads != pay).any():
+            _fail("staging per-tick payloads disagree with round lengths")
+        glob_pay = max(glob_pay, int(pay.max()) if pay.size else 0)
+    off = stage_base
+    g = 0
+    for seg in segments:
+        st = seg.stage
+        lmax = st.lmax
+        for t in range(len(seg.ticks)):
+            pay_t = int(st.payloads[t])
+            if depth == 1:
+                if int(st.base[t]) != off or int(st.frame_of[t]) != -1:
+                    _fail(
+                        f"write-once staging: tick base {int(st.base[t])} "
+                        f"!= running offset {off} (strips must be "
+                        f"tick-major and clobber-free)"
+                    )
+                o = off
+            else:
+                if pay_t == 0:
+                    if int(st.frame_of[t]) != -1 or (
+                        int(st.base[t]) != stage_base
+                    ):
+                        _fail("idle tick must park its read-back block at "
+                              "the staging base")
+                    continue
+                fr = int(st.frame_of[t])
+                if fr != g % depth:
+                    _fail(
+                        f"rotating staging: shipping tick {g} landed in "
+                        f"frame {fr}, expected {g % depth} (round-robin "
+                        f"rotation gives retire its {depth}-tick slack)"
+                    )
+                if pay_t > st.frame_elems:
+                    _fail(
+                        f"tick payload {pay_t} exceeds frame_elems "
+                        f"{st.frame_elems}"
+                    )
+                if int(st.base[t]) != stage_base + fr * st.frame_elems:
+                    _fail("rotating staging: tick base off its frame")
+                g += 1
+                o = int(st.base[t])
+            for r_i in np.nonzero(st.act[t])[0]:
+                if int(st.soff[t, r_i]) != o:
+                    _fail(
+                        f"round strip {int(st.soff[t, r_i])} != payload "
+                        f"block offset {o} (landed blocks must be "
+                        f"contiguous in round order)"
+                    )
+                o += seg.rounds[r_i].length
+            if depth == 1:
+                off = o
+            if int(st.base[t]) + lmax > st.stage_end:
+                _fail("tick block + read-back tail spills past stage_end")
+    for seg in segments:
+        st = seg.stage
+        want_frame = glob_pay if depth > 1 else 0
+        if st.frame_elems != want_frame:
+            _fail(
+                f"frame_elems {st.frame_elems} != globally largest tick "
+                f"payload {want_frame}"
+            )
+        if depth > 1 and st.stage_end < stage_base + depth * st.frame_elems:
+            _fail("staging region smaller than depth * frame_elems")
+        if depth == 1 and st.stage_end < off:
+            _fail("write-once staging region smaller than its last strip")
 
 
 def _check_spans(plan: ExecutionPlan, model, layout: RegisterLayout) -> None:

@@ -478,25 +478,34 @@ plan = coalesce_transfer_steps(build_plan(dsh(sdag, m), sdag))
 layout = _plan_layout(plan, sliced)
 total = layout.total
 
-# knob matrix: snapshots (and output) bit-identical in the register region
+# knob matrix: snapshots (and output) bit-identical in the register region.
+# buffer_depth >= 2 streams deliveries through rotating staging frames and
+# donates the carry, but retire-on-evict materializes every live value back
+# into its packed column before a frame rotates — snapshots [:total] must
+# stay byte-equal to the depth-1 (write-once staging) executor.
 ref_y = ref_snaps = spans = None
-for cr, bp in itertools.product((True, False), repeat=2):
+for cr, bp, depth in itertools.product(
+        (True, False), (True, False), (1, 2, 4)):
     f = build_mpmd_executor(plan, sliced, params, mesh, batch=batch,
                             segmented=True, checkpoint=True,
-                            cohort_rounds=cr, bake_params=bp)
+                            cohort_rounds=cr, bake_params=bp,
+                            buffer_depth=depth)
     y, snaps = f(x)
     regs = np.asarray(snaps[:, :, :, :total])
     if ref_y is None:
         ref_y, ref_snaps, spans = np.asarray(y), regs, f.segment_spans
     else:
-        assert (np.asarray(y) == ref_y).all(), (cr, bp)
-        assert f.segment_spans == spans, (cr, bp)
-        assert (regs == ref_snaps).all(), (cr, bp)
+        assert (np.asarray(y) == ref_y).all(), (cr, bp, depth)
+        assert f.segment_spans == spans, (cr, bp, depth)
+        assert (regs == ref_snaps).all(), (cr, bp, depth)
+    if depth == 4:
+        stream_snaps = regs
 
-# kill x resume drill: each boundary snapshot restarts the numpy runner
-# on the same plan and still reaches the reference output
+# kill x resume drill: each boundary snapshot of the *streamed* (depth-4)
+# executor restarts the numpy runner on the same plan and still reaches the
+# reference output — a kill at any barrier never observes in-flight frames
 for k, (start, stop) in enumerate(spans[:-1]):
-    bufs = [ref_snaps[k, w] for w in range(m)]
+    bufs = [stream_snaps[k, w] for w in range(m)]
     done = {n for s in plan.steps[:stop] for seg in s.compute for n in seg}
     res = resume_plan(plan, sliced, params, x, layout, bufs, done)
     assert res.status == "ok", (k, stop)

@@ -252,6 +252,44 @@ print("EXEC_TICK_OK", fe.exec_runs, fe.runs)
 """, devices=4)
         assert "EXEC_TICK_OK" in out
 
+    def test_executor_cache_keyed_on_knob_tuple(self, subproc):
+        """Re-attaching with different knobs (here ``buffer_depth``) must
+        never reuse a stale compiled executor: the cache is keyed on the
+        full knob tuple and cleared on attach, and results stay
+        bit-identical across depths."""
+        out = subproc("""
+import numpy as np
+import jax
+from repro.core.costmodel import KEYSTONE_CPU
+from repro.models.cnn import lenet5
+from repro.models.slicing import slice_model, uniform_factors
+from repro.serve import Frontend, poisson_trace, input_pool
+
+model = lenet5()
+sliced = slice_model(model, uniform_factors(model, 4))
+dag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
+params = model.init_params(jax.random.PRNGKey(0))
+pool = input_pool(model.layers[0].out_shape, 4, seed=3)
+prints = {}
+keys = {}
+for depth in (1, 2):
+    fe = Frontend(sliced, params, dag, m=4, hw=KEYSTONE_CPU)
+    fe.attach_executor(buffer_depth=depth)
+    assert fe._exec_knobs == (depth, True, True, False)
+    assert not fe._exec_cache, "attach must clear the cache"
+    trace = poisson_trace(4, seed=5, rate=2.0 / fe.est_service,
+                          service=fe.est_service)
+    fe.run_trace(trace, pool)
+    assert fe.exec_runs > 0 and fe.exec_runs == fe.runs
+    keys[depth] = set(fe._exec_cache)
+    prints[depth] = fe.fingerprint()
+assert keys[1] != keys[2]
+assert all(k[1] == d for d in keys for k in keys[d]), keys
+assert prints[1] == prints[2]
+print("KNOB_CACHE_OK")
+""", devices=4)
+        assert "KNOB_CACHE_OK" in out
+
     def test_checkpoint_steps_matches_runner_barriers(self, subproc):
         """executor.checkpoint_steps names the superstep each snapshot is
         the entering barrier of — snaps[k] must equal the runner's barrier
