@@ -19,6 +19,12 @@ Times the fast-path pipeline across DAG sizes and worker counts:
                           (224) must schedule at most 0.9x the best uniform
                           single-axis tiling on 8 workers (the nested
                           tiling IR acceptance gate)
+* ``analysis``          — static hazard analysis: the happens-before
+                          analyzer (``codegen/analyze.py``) proves the
+                          headline grid-sliced inception(64) m=8 plan
+                          hazard-free at streaming depth 2 (every run; the
+                          trend-gated ``analyze_s`` row) and across the
+                          1/2/4 depth sweep (full runs)
 * ``fault``             — recovery-cost rows: the deterministic
                           kill → detect → replan → migrate → resume drill
                           (``runtime/faults.py``) on sliced lenet5 (always —
@@ -355,6 +361,53 @@ def bench_grid(results):
     )
 
 
+def bench_plan_analysis(results, quick):
+    """Static hazard analysis on the headline config: the happens-before
+    analyzer (``codegen/analyze.py``) must prove the grid-sliced
+    inception(64) m=8 plan hazard-free — race-free, donation-safe,
+    sync-sufficient, deterministic — at the streaming buffer depths, and
+    its wall time joins the trend gates (``analyze_s``) so the cell-level
+    simulation can't silently decay into the dominant cost of ``make
+    check``.  Quick runs analyze depth 2 (the streaming default the CI run
+    gate executes at); full runs sweep 1/2/4."""
+    from repro.core import dsh
+    from repro.core.costmodel import KEYSTONE_CPU
+    from repro.codegen import coalesce_transfer_steps
+    from repro.codegen.analyze import analyze_plan
+    from repro.models.cnn import inception_net
+    from repro.models.slicing import slice_model, uniform_factors
+
+    m = 8
+    model = inception_net(64)
+    base = uniform_factors(model, 8, spatial=True)
+    factors = {k: ((2, 4) if v == (1, 8) else v) for k, v in base.items()}
+    sliced = slice_model(model, factors)
+    sdag = sliced.to_dag(KEYSTONE_CPU, time_unit=1e-6)
+    plan = coalesce_transfer_steps(build_plan(dsh(sdag, m), sdag))
+
+    # depth 2 is always analyzed (and hence always trend-gated — the quick
+    # CI row must key-match a baseline row the full run wrote); full runs
+    # add the 1/2/4 sweep as a second row
+    for depths in ((2,),) if quick else ((2,), (1, 2, 4)):
+        t0 = time.perf_counter()
+        rep = analyze_plan(plan, sdag, sliced, depths=depths)
+        analyze_s = time.perf_counter() - t0
+        assert rep.ok, "headline plan has hazards:\n" + rep.summary()
+        results.append({
+            "kind": "plan_analysis",
+            "model": model.name,
+            "n_workers": m,
+            "depths": list(depths),
+            "analyze_s": round(analyze_s, 3),
+            "analyze_ms": round(analyze_s * 1e3, 1),
+            "cell_accesses": rep.stats.get("cell_events", 0),
+            "superstep_events": rep.stats.get("plan_events", 0),
+            "sync_verdict": rep.sync.get("verdict", ""),
+        })
+        print(f"plan-analysis {model.name} m={m} depths={list(depths)}: "
+              f"{analyze_s * 1e3:.0f}ms — {rep.summary().splitlines()[0]}")
+
+
 def bench_fault_recovery(results, quick):
     """Recovery-cost rows: the kill → detect → replan → migrate → resume
     drill on sliced plans (``runtime/faults.py``), with the resumed output
@@ -445,6 +498,9 @@ def check_trend(results, baseline_path):
             return ("serve", r["model"], r["n_workers"], r["n_requests"])
         if r.get("kind") == "stream":
             return ("stream", r["model"], r["n_workers"], r["buffer_depth"])
+        if r.get("kind") == "plan_analysis":
+            return ("analysis", r["model"], r["n_workers"],
+                    tuple(r["depths"]))
         return None
 
     if not os.path.exists(baseline_path):
@@ -459,7 +515,7 @@ def check_trend(results, baseline_path):
         b = base.get(key(r))
         if b is None:
             continue
-        for field in ("schedule_s", "plan_s", "replan_s"):
+        for field in ("schedule_s", "plan_s", "replan_s", "analyze_s"):
             bv, cv = b.get(field), r.get(field)
             if bv is None or cv is None:
                 continue
@@ -761,6 +817,7 @@ def main():
     )
     bench_sliced(workers, results)
     bench_grid(results)
+    bench_plan_analysis(results, args.quick)
     bench_fault_recovery(results, args.quick)
     sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
     from serve_chaos import bench_serve_chaos

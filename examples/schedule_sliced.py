@@ -47,10 +47,16 @@ frames + donated carry) and prints, per depth, the carry width, resident
 staging footprint, retire-copy volume and the full/comm/kernel/assembly
 totals — the comm-compute-overlap breakdown of the streaming mode.
 
+``--analyze`` runs the static concurrency analyzer (``codegen/analyze.py``)
+on the chosen plan: the happens-before hazard verdict at buffer depths
+1/2/4, per-segment access statistics, and the sync-cost/slack report
+(zero-slack vs deferrable comm rounds, unread payloads, and either
+quantified removable-sync findings or the asserted minimality verdict).
+
     PYTHONPATH=src python examples/schedule_sliced.py \
         [--model inception|lenet5|transformer] [--input 64] [--workers 8]
         [--factor 8] [--spatial] [--auto-factors | --grid] [--hw keystone|tpu]
-        [--tighten-s 0] [--segmented] [--profile] [--stream]
+        [--tighten-s 0] [--segmented] [--profile] [--stream] [--analyze]
 """
 import argparse
 import os
@@ -165,6 +171,13 @@ def main():
                          "executor: per-depth carry width, staging "
                          "footprint, retire volume and full/comm/kernel/"
                          "assembly totals (the streaming overlap breakdown)")
+    ap.add_argument("--analyze", action="store_true",
+                    help="static concurrency analysis of the chosen plan "
+                         "(codegen/analyze.py): happens-before hazard "
+                         "verdict at buffer depths 1/2/4, per-segment "
+                         "access statistics, and the sync-cost/slack "
+                         "report (removable-sync findings or the asserted "
+                         "minimality verdict)")
     args = ap.parse_args()
     if args.spatial and (args.grid or args.auto_factors):
         ap.error("--spatial only applies to uniform factors; the grid/parity "
@@ -240,6 +253,9 @@ def main():
           f"across {ps['origins']} originating layers "
           f"(max {ps['max_transfers_per_origin']} transfers per layer)")
 
+    if args.analyze:
+        analyze_report(plan, sdag, sliced)
+
     if not args.skip_exec or args.segmented or args.profile or args.stream:
         key = jax.random.PRNGKey(0)
         params = model.init_params(key)
@@ -273,6 +289,43 @@ def main():
 
     if args.stream:
         stream_report(plan, sliced, params, mesh, x, ref)
+
+
+def analyze_report(plan, sdag, sliced):
+    """--analyze satellite: static hazard + sync-cost report.
+
+    Runs the happens-before analyzer (superstep-level HB graph over every
+    compute/transfer, then the cell-level staging simulation at streaming
+    buffer depths 1/2/4) and prints the hazard verdict, the per-segment
+    access statistics of the coalesced segmented lowering, and the sync
+    report — zero-slack vs deferrable comm rounds, unread payloads, and
+    either quantified removable-sync findings or the asserted minimality
+    verdict."""
+    from repro.codegen import coalesce_transfer_steps
+    from repro.codegen.analyze import analyze_plan
+
+    t0 = time.perf_counter()
+    rep = analyze_plan(coalesce_transfer_steps(plan), sdag, sliced,
+                       depths=(1, 2, 4))
+    dt = (time.perf_counter() - t0) * 1e3
+    print(f"== static concurrency analysis ({dt:.0f} ms) ==")
+    for line in rep.summary(max_hazards=12).splitlines():
+        print(f"  {line}")
+    if rep.segments:
+        print(f"  {'seg':>4} {'steps':>9} {'ticks':>5} {'rounds':>6} "
+              f"{'retired':>8} {'hazards':>7}")
+        for row in rep.segments:
+            lo, hi = row["steps"]
+            print(f"  {row['segment']:>4} {f'{lo}-{hi}':>9} "
+                  f"{row['ticks']:>5} {row['rounds']:>6} "
+                  f"{row['retired_elems']:>8} {row['hazards']:>7}")
+    s = rep.sync
+    if s:
+        print(f"  slack: {s['zero_slack_transfers']}/{s['consumed_transfers']}"
+              f" consumed payloads needed on the next superstep; "
+              f"{s['deferrable_rounds']}/{s['comm_rounds']} rounds "
+              f"deferrable; {s['unread_transfers']} unread transfers "
+              f"({s['unread_elems']} elems)")
 
 
 def profile_segments(plan, sliced, params, mesh, x, ref):

@@ -24,20 +24,32 @@
 # that binds on 1-core hosts where the overlap cannot materialize), and
 # the trend gates against the committed BENCH_sched.json —
 # 2x on scheduler/replan timings, 1.5x on sliced/grid transfer bytes,
-# fault-row migrated bytes and stream-row peak staging bytes (the DSH/ISH
+# fault-row migrated bytes and stream-row peak staging bytes, and the
+# plan-analysis row: codegen/analyze.py's happens-before analyzer proves
+# the headline grid-sliced inception(64) m=8 plan hazard-free at streaming
+# depth 2 with its analyze_s wall time trend-gated (the DSH/ISH
 # ratio bar needs the 2000-node matrix and only runs in the full
 # `make bench`).  The smoke run writes to a scratch path so the committed
 # baseline is only refreshed deliberately (make bench).
 #
 # Plan validation: tests/conftest.py wraps build_plan so validate_plan's
-# static-analysis pass (supplier liveness, register sizing/overlap, ring
-# padding sentinels, tick uniformity, transfer-box bounds) runs over every
-# plan the test suite builds — original and replanned alike.
+# deep=True pass — structural checks (supplier liveness, register
+# sizing/overlap, ring padding sentinels, tick uniformity, transfer-box
+# bounds) plus the superstep-level happens-before hazard analysis — runs
+# over every plan the test suite builds, original and replanned alike,
+# deduplicated by content fingerprint.
+#
+# Trace hygiene: scripts/lint_tracehygiene.py forbids jnp fancy indexing
+# and int()/float() coercions inside the scan-body/kernel trace scopes of
+# codegen/ (allowlisted exceptions only).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 pytest (validate_plan wrapped over every built plan) =="
+echo "== trace-hygiene lint (codegen/ scan-body + kernel scopes) =="
+python scripts/lint_tracehygiene.py
+
+echo "== tier-1 pytest (validate_plan deep=True over every built plan) =="
 timeout 1800 python -m pytest -x -q
 
 echo "== sched_scale smoke (--quick, trend-gated, incl. fault drill) =="

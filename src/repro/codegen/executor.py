@@ -98,6 +98,7 @@ so runtime regressions are attributable per segment and per phase
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
@@ -121,6 +122,12 @@ __all__ = [
     "build_mpmd_executor",
     "plan_liveness",
     "executed_comm_bytes",
+    "PlanTables",
+    "SegmentAccess",
+    "AccessTables",
+    "plan_tables",
+    "plan_access_walk",
+    "segment_access_tables",
 ]
 
 
@@ -737,6 +744,336 @@ def _waterfill(loads: np.ndarray, lo: int, hi: int, n: int) -> np.ndarray:
     return add
 
 
+@dataclasses.dataclass
+class PlanTables:
+    """Plan-side canonicalization shared by the segmented executor build
+    and the static analyzer (:mod:`repro.codegen.analyze`): packed register
+    layout, sentinel regions, segment schema and per-node raw gather rows —
+    all derived with numpy only.  One derivation serves both, so the
+    executor and the happens-before analysis can never disagree about
+    where a value lives."""
+    offsets: Dict[str, int]
+    total: int
+    zero_base: int
+    neginf_base: int
+    dump_col: int
+    reg_shapes: Dict[str, Tuple[int, ...]]
+    reg_sizes: Dict[str, int]
+    birth: Dict[str, int]
+    death: Dict[str, int]
+    segments: List
+    raw_rows: Dict[str, List[np.ndarray]]
+
+    @property
+    def zrun(self) -> int:
+        return self.neginf_base - self.total
+
+    @property
+    def nrun(self) -> int:
+        return self.dump_col - self.neginf_base
+
+
+@dataclasses.dataclass
+class SegmentAccess:
+    """Build-time access metadata for one segment: every gather the
+    kernels will issue (statically redirected through the schedule walk's
+    per-worker ``home`` map), the water-filled retire copy tables, and the
+    checkpoint materialization pairs.  This is the executor's exact
+    memory-access schedule, exposed so the analyzer can verify the tables
+    the runtime actually compiles rather than a parallel reconstruction."""
+    gin_red: Dict[Tuple[int, int], List[np.ndarray]]  # (tick, worker)
+    ret_src: Optional[np.ndarray]   # (n_ticks, m, k) int32, dump-padded
+    ret_dst: Optional[np.ndarray]
+    retire_elems: int
+    mat: Optional[Tuple[np.ndarray, np.ndarray]]  # (m, k) src/dst pairs
+
+
+@dataclasses.dataclass
+class AccessTables:
+    """A plan's full access schedule at one ``buffer_depth``."""
+    tables: PlanTables
+    access: List[SegmentAccess]
+    buffer_depth: int
+    checkpoint: bool
+
+
+def plan_tables(
+    plan: ExecutionPlan,
+    model: CNNModel,
+    liveness: bool = True,
+    buffer_depth: int = 1,
+    cohort_rounds: bool = True,
+    offsets: Optional[Dict[str, int]] = None,
+) -> PlanTables:
+    """Derive the packed layout, sentinel regions, raw gather rows and
+    segment schema for a plan (numpy only — no tracing).  ``offsets``
+    overrides the packed layout (the analyzer's mutation oracle uses this
+    to alias registers without re-deriving everything else)."""
+    from repro.codegen.segment import max_sentinel_runs, node_gather_rows
+
+    reg_shapes = {l.name: tuple(l.out_shape) for l in model.layers}
+    reg_sizes = {
+        n: (int(np.prod(s)) if s else 1) for n, s in reg_shapes.items()
+    }
+    birth, death, _sets = plan_liveness(plan, model)
+    if offsets is None:
+        live = (birth, death) if liveness else None
+        offsets, total = pack_registers(plan, reg_sizes, liveness=live)
+    else:
+        total = max(offsets[n] + reg_sizes[n] for n in offsets)
+
+    # raw gather rows once per node; the longest sentinel *runs* size the
+    # sentinel regions so every halo-pad run can resolve to a contiguous
+    # ascending range and join a span (see segment.resolve_rows)
+    raw_rows: Dict[str, List[np.ndarray]] = {}
+    zrun = nrun = 1
+    for step in plan.steps:
+        for seg_nodes in step.compute:
+            for node in seg_nodes:
+                if node in raw_rows:
+                    continue
+                rws = node_gather_rows(model, node, offsets)
+                raw_rows[node] = rws
+                for r in rws:
+                    z, nf = max_sentinel_runs(r)
+                    zrun, nrun = max(zrun, z), max(nrun, nf)
+    # pristine sentinel regions follow the registers: ``[total, total+zrun)``
+    # holds 0.0 (virtualized conv/avgpool halo pads), the next ``nrun``
+    # columns hold -inf (maxpool halo pads), and the final column is the
+    # dump column comm padding gathers from and scatters into — so every
+    # index is in bounds and padding can never touch a real register
+    zero_base = total
+    neginf_base = total + zrun
+    dump_col = total + zrun + nrun
+    segments = build_segments(
+        plan, reg_shapes, offsets, pad_index=dump_col,
+        buffer_depth=buffer_depth,
+        **({} if cohort_rounds else {"cohort_ratio": None}),
+    )
+    return PlanTables(
+        offsets=offsets, total=total, zero_base=zero_base,
+        neginf_base=neginf_base, dump_col=dump_col,
+        reg_shapes=reg_shapes, reg_sizes=reg_sizes,
+        birth=birth, death=death, segments=segments, raw_rows=raw_rows,
+    )
+
+
+def plan_access_walk(
+    plan: ExecutionPlan,
+    pt: PlanTables,
+    buffer_depth: int = 1,
+    checkpoint: bool = False,
+) -> List[SegmentAccess]:
+    """Replay the tick schedule and emit each segment's access metadata.
+
+    The walk mirrors the runtime tick order exactly — compute first, then
+    the retire copies of a reused frame's surviving occupants, then the
+    comm rounds' landings — while maintaining the per-worker ``home`` map:
+    where each packed register column's current value actually lives (its
+    own column, or a staging strip column when the value arrived via a
+    comm round and has not been recomputed since).  Every gather table is
+    redirected through the home state its tick will observe.
+
+    Rotating frames (``buffer_depth >= 2``) additionally track per-frame
+    occupancy: when a shipping tick reuses a frame, every delivery record
+    still current in ``home`` is retired — copied back to its packed
+    register columns just before the landing DUS clobbers the frame.
+    Retiring is always semantics-preserving (the packed column is reserved
+    until the value's death, and the runner materializes deliveries there
+    anyway), so no liveness analysis is needed: over-retiring a dead value
+    writes a column nothing will read again.  Retire bursts are
+    water-filled backward across their safe windows (delivery + 1 ..
+    eviction) so the uniform scan table pays the mean, not the burst max.
+    """
+    m = plan.n_workers
+    total, dump_col = pt.total, pt.dump_col
+    ident = np.arange(total, dtype=np.int32)
+    home = np.tile(ident, (m, 1))
+    owner = np.full((m, total), -1, np.int64)    # node id of last delivery
+    pos2node = np.full(total, -1, np.int64)      # current producer per col
+    node_ids: Dict[str, int] = {}
+
+    def nid_of(node: str) -> int:
+        i = node_ids.get(node)
+        if i is None:
+            i = node_ids[node] = len(node_ids)
+        return i
+
+    def redirect(w: int, rws: List[np.ndarray]) -> List[np.ndarray]:
+        out = []
+        for rr in rws:
+            a = np.asarray(rr, np.int32).copy()
+            msk = a >= 0
+            a[msk] = home[w, a[msk]]
+            out.append(a)
+        return out
+
+    # rotating-frame occupancy: per frame, the (worker, packed cols, strip
+    # cols, delivery segment, delivery tick) records currently living there
+    frame_occ: List[List[Tuple[int, np.ndarray, np.ndarray, int, int]]] = [
+        [] for _ in range(buffer_depth)
+    ]
+    out: List[SegmentAccess] = []
+    for seg_i, seg in enumerate(pt.segments):
+        n_ticks = len(seg.ticks)
+        act_np = seg.stage.act
+        soff = seg.stage.soff
+        round_rows = [np.asarray(r.rows) for r in seg.rounds]
+        round_slots = [np.asarray(r.slot) for r in seg.rounds]
+        # (worker, strip cols, packed cols, window lo, window hi): retire
+        # chunks with the tick range each copy may legally run in
+        ret_chunks: List[
+            Tuple[int, np.ndarray, np.ndarray, int, int]
+        ] = []
+        gin_red: Dict[Tuple[int, int], List[np.ndarray]] = {}
+        for t, row in enumerate(seg.ticks):
+            for w, node in enumerate(row):
+                if node is None:
+                    continue
+                gin_red[(t, w)] = redirect(w, pt.raw_rows[node])
+                off_n, sz_n = pt.offsets[node], pt.reg_sizes[node]
+                home[w, off_n:off_n + sz_n] = ident[off_n:off_n + sz_n]
+                pos2node[off_n:off_n + sz_n] = nid_of(node)
+            if buffer_depth > 1 and seg.stage.payloads[t]:
+                # this shipping tick reuses rotating frame ``fr``: retire
+                # its still-current occupants to their packed columns
+                # (compute at this tick already resolved its gathers
+                # against the strips — the runtime retire copy runs
+                # after the kernel write, before the landing DUS)
+                fr = int(seg.stage.frame_of[t])
+                for (w, pcs, scs, d_seg, d_t) in frame_occ[fr]:
+                    valid = home[w, pcs] == scs
+                    if valid.any():
+                        # a pair still current now was current ever since
+                        # its delivery (``home`` entries are only touched
+                        # by delivery, compute reuse, and retirement), so
+                        # the copy may run at any tick after the strip
+                        # landed and no later than this one
+                        lo = d_t + 1 if d_seg == seg_i else 0
+                        ret_chunks.append(
+                            (w, scs[valid], pcs[valid], min(lo, t), t)
+                        )
+                        home[w, pcs[valid]] = pcs[valid]
+                frame_occ[fr] = []
+            for r_i, r in enumerate(seg.rounds):
+                if not act_np[t, r_i]:
+                    continue
+                strip = soff[t, r_i]
+                for w in range(m):
+                    rw = round_rows[r_i][round_slots[r_i][t, w]]
+                    real = np.nonzero(rw != dump_col)[0]
+                    if not real.size:
+                        continue
+                    cols = rw[real]
+                    s = (w - r.delta) % m
+                    if not (home[s, cols] == cols).all():
+                        raise NotImplementedError(
+                            "staged comm: sender would forward a value it "
+                            "received rather than produced"
+                        )
+                    strips = strip + real.astype(np.int32)
+                    home[w, cols] = strips
+                    owner[w, cols] = pos2node[cols]
+                    if buffer_depth > 1:
+                        frame_occ[int(seg.stage.frame_of[t])].append(
+                            (w, np.asarray(cols, np.int32), strips, seg_i, t)
+                        )
+        # per-tick retire tables (rotating frames only): dst-sorted
+        # (strip, packed) column pairs per worker, dump-padded to the
+        # segment max — one gather + one sorted scatter per tick moves a
+        # reused frame's surviving occupants home.  The scan body pads
+        # every tick to the segment's widest retire, so eviction bursts
+        # are first water-filled backward across their safe windows
+        # (delivery + 1 .. eviction), flattening the per-tick maximum
+        # toward the mean instead of the burst size.
+        ret_by_tw: Dict[Tuple[int, int], List[Tuple[np.ndarray, np.ndarray]]]
+        ret_by_tw = {}
+        if ret_chunks:
+            loads = np.zeros((n_ticks, m), np.int64)
+            for (w, scs, pcs, lo, hi) in ret_chunks:
+                counts = _waterfill(loads[:, w], lo, hi, len(scs))
+                off = 0
+                for t_r, c in zip(range(lo, hi + 1), counts):
+                    c = int(c)
+                    if not c:
+                        continue
+                    ret_by_tw.setdefault((t_r, w), []).append(
+                        (scs[off:off + c], pcs[off:off + c])
+                    )
+                    loads[t_r, w] += c
+                    off += c
+        retire_elems = 0
+        ret_k = max(
+            [0] + [
+                sum(len(s) for (s, _d) in chunks)
+                for chunks in ret_by_tw.values()
+            ]
+        )
+        ret_src = ret_dst = None
+        if ret_k:
+            ret_src = np.full((n_ticks, m, ret_k), dump_col, np.int32)
+            ret_dst = np.full((n_ticks, m, ret_k), dump_col, np.int32)
+            for (t, w), chunks in ret_by_tw.items():
+                scs = np.concatenate([s for (s, _d) in chunks])
+                pcs = np.concatenate([d for (_s, d) in chunks])
+                order = np.argsort(pcs, kind="stable")
+                ret_src[t, w, : len(scs)] = scs[order]
+                ret_dst[t, w, : len(pcs)] = pcs[order]
+                retire_elems += len(pcs)
+        # barrier materialization (checkpoint runs only): copy every
+        # staged delivery back to its packed column, so snapshots stay
+        # bit-equivalent to the reference runner's barrier state (which
+        # writes deliveries straight into the register file, live or not)
+        # and fault-time replan/resume (migrate_registers) sees a
+        # canonical register file
+        mat = None
+        if checkpoint:
+            pairs = []
+            for w in range(m):
+                moved = np.nonzero(home[w] != ident)[0]
+                keep = sorted(p for p in moved if owner[w, p] >= 0)
+                pairs.append([(home[w, p], p) for p in keep])
+            k_max = max(len(p) for p in pairs)
+            if k_max:
+                src = np.full((m, k_max), dump_col, np.int32)
+                dst = np.full((m, k_max), dump_col, np.int32)
+                for w, pr in enumerate(pairs):
+                    for j, (s_c, d_c) in enumerate(pr):
+                        src[w, j] = s_c
+                        dst[w, j] = d_c
+                mat = (src, dst)
+        out.append(SegmentAccess(
+            gin_red=gin_red, ret_src=ret_src, ret_dst=ret_dst,
+            retire_elems=retire_elems, mat=mat,
+        ))
+    return out
+
+
+def segment_access_tables(
+    plan: ExecutionPlan,
+    model: CNNModel,
+    *,
+    liveness: bool = True,
+    buffer_depth: int = 1,
+    cohort_rounds: bool = True,
+    checkpoint: bool = True,
+    offsets: Optional[Dict[str, int]] = None,
+) -> AccessTables:
+    """The executor's access metadata for one plan at one ``buffer_depth``
+    — the single entry point the happens-before analyzer consumes."""
+    pt = plan_tables(
+        plan, model, liveness=liveness, buffer_depth=buffer_depth,
+        cohort_rounds=cohort_rounds, offsets=offsets,
+    )
+    access = plan_access_walk(
+        plan, pt, buffer_depth=buffer_depth, checkpoint=checkpoint,
+    )
+    return AccessTables(
+        tables=pt, access=access, buffer_depth=buffer_depth,
+        checkpoint=checkpoint,
+    )
+
+
 def _make_branch(
     sig, tab, x, batch: int, gin_kinds, pidx_identity: bool,
     const_pops=None,
@@ -896,49 +1233,26 @@ def _build_segmented(
     from repro.codegen.segment import (
         SpanTable,
         coalesce_spans,
-        max_sentinel_runs,
-        node_gather_rows,
         node_signature,
         param_slices,
         resolve_rows,
     )
 
     m = plan.n_workers
-    reg_shapes = {l.name: tuple(l.out_shape) for l in model.layers}
-    reg_sizes = {
-        n: (int(np.prod(s)) if s else 1) for n, s in reg_shapes.items()
-    }
-    birth, death, _sets = plan_liveness(plan, model)
-    live = (birth, death) if liveness else None
-    offsets, total = pack_registers(plan, reg_sizes, liveness=live)
-
-    # raw gather rows once per node; the longest sentinel *runs* size the
-    # sentinel regions so every halo-pad run can resolve to a contiguous
-    # ascending range and join a span (see segment.resolve_rows)
-    raw_rows: Dict[str, List[np.ndarray]] = {}
-    zrun = nrun = 1
-    for step in plan.steps:
-        for seg_nodes in step.compute:
-            for node in seg_nodes:
-                if node in raw_rows:
-                    continue
-                rws = node_gather_rows(model, node, offsets)
-                raw_rows[node] = rws
-                for r in rws:
-                    z, nf = max_sentinel_runs(r)
-                    zrun, nrun = max(zrun, z), max(nrun, nf)
-    # pristine sentinel regions follow the registers: ``[total, total+zrun)``
-    # holds 0.0 (virtualized conv/avgpool halo pads), the next ``nrun``
-    # columns hold -inf (maxpool halo pads), and the final column is the
-    # dump column comm padding gathers from and scatters into — so every
-    # index is in bounds and padding can never touch a real register
-    zero_base = total
-    neginf_base = total + zrun
-    dump_col = total + zrun + nrun
-    segments = build_segments(
-        plan, reg_shapes, offsets, pad_index=dump_col,
-        buffer_depth=buffer_depth,
-        **({} if cohort_rounds else {"cohort_ratio": None}),
+    # plan-side canonicalization + the build-time schedule walk (shared
+    # with codegen/analyze.py, which verifies these exact tables)
+    pt = plan_tables(
+        plan, model, liveness=liveness, buffer_depth=buffer_depth,
+        cohort_rounds=cohort_rounds,
+    )
+    offsets, total = pt.offsets, pt.total
+    reg_shapes, reg_sizes = pt.reg_shapes, pt.reg_sizes
+    raw_rows = pt.raw_rows
+    zero_base, neginf_base = pt.zero_base, pt.neginf_base
+    dump_col, nrun = pt.dump_col, pt.nrun
+    segments = pt.segments
+    access = plan_access_walk(
+        plan, pt, buffer_depth=buffer_depth, checkpoint=checkpoint,
     )
 
     # staging layout (plan-side, ``SegmentStaging``): every comm round
@@ -994,64 +1308,15 @@ def _build_segmented(
             sig_cache[node] = node_signature(model, node)
         return sig_cache[node]
 
-    # per-worker "home" map: where each packed register column's current
-    # value actually lives (its own column, or a staging strip column when
-    # the value arrived via a comm round and has not been recomputed
-    # since).  The walk below mirrors the runtime tick order exactly —
-    # compute first, then rounds — so every gather table is redirected
-    # through the home state its tick will observe.
-    ident = np.arange(total, dtype=np.int32)
-    home = np.tile(ident, (m, 1))
-    owner = np.full((m, total), -1, np.int64)    # node id of last delivery
-    pos2node = np.full(total, -1, np.int64)      # current producer per col
-    node_ids: Dict[str, int] = {}
-    node_death: List[int] = []
-
-    def nid_of(node: str) -> int:
-        i = node_ids.get(node)
-        if i is None:
-            i = node_ids[node] = len(node_death)
-            node_death.append(death.get(node, len(plan.steps)))
-        return i
-
-    def redirect(w: int, rws: List[np.ndarray]) -> List[np.ndarray]:
-        out = []
-        for rr in rws:
-            a = np.asarray(rr, np.int32).copy()
-            msk = a >= 0
-            a[msk] = home[w, a[msk]]
-            out.append(a)
-        return out
-
     seg_meta = []     # (sig_list, sig_infos, deltas, lengths, single,
                       #  patterns, lmax, wseg, idle_st, has_ret)
     seg_tables = []   # per segment: pytree of jnp operand tables (jit args)
     seg_stats = []    # per segment: static span/round statistics
-    # rotating-frame occupancy (buffer_depth >= 2): per frame, the
-    # (worker, packed cols, strip cols) records of deliveries currently
-    # living there.  When a shipping tick reuses a frame, every record
-    # still current in ``home`` is retired — copied back to its packed
-    # register columns by the tick's retire table, just before the
-    # landing DUS clobbers the frame.  Retiring is always
-    # semantics-preserving (the packed column is reserved until the
-    # value's death, and the runner materializes deliveries there
-    # anyway), so no liveness analysis is needed: over-retiring a dead
-    # value writes a column nothing will read again.
-    frame_occ: List[List[Tuple[int, np.ndarray, np.ndarray]]] = [
-        [] for _ in range(buffer_depth)
-    ]
     for seg_i, seg in enumerate(segments):
         n_ticks = len(seg.ticks)
         act_np = seg.stage.act
-        soff = seg.stage.soff
         patterns = seg_patterns[seg_i]
-        round_rows = [np.asarray(r.rows) for r in seg.rounds]
-        round_slots = [np.asarray(r.slot) for r in seg.rounds]
-        # (worker, strip cols, packed cols, window lo, window hi): retire
-        # chunks with the tick range each copy may legally run in
-        ret_chunks: List[
-            Tuple[int, np.ndarray, np.ndarray, int, int]
-        ] = []
+        acc = access[seg_i]
         sig_list: List = []
         sig_index: Dict = {}
         occs: List[Dict] = []
@@ -1070,7 +1335,7 @@ def _build_segmented(
                     occs.append({"gin": [], "out": [], "pidx": [],
                                  "uniq": {}, "parrs": []})
                 o = occs[sid]
-                o["gin"].append(redirect(w, raw_rows[node]))
+                o["gin"].append(acc.gin_red[(t, w)])
                 o["out"].append(offsets[node])
                 if pkey is not None:
                     pi = o["uniq"].get(pkey)
@@ -1080,53 +1345,6 @@ def _build_segmented(
                     o["pidx"].append(pi)
                 sig_tab[t, w] = sid + 1  # 0 is the idle branch
                 occ_tab[t, w] = len(o["out"]) - 1
-                off_n, sz_n = offsets[node], reg_sizes[node]
-                home[w, off_n:off_n + sz_n] = ident[off_n:off_n + sz_n]
-                pos2node[off_n:off_n + sz_n] = nid_of(node)
-            if buffer_depth > 1 and seg.stage.payloads[t]:
-                # this shipping tick reuses rotating frame ``fr``: retire
-                # its still-current occupants to their packed columns
-                # (compute at this tick already resolved its gathers
-                # against the strips — the runtime retire copy runs
-                # after the kernel write, before the landing DUS)
-                fr = int(seg.stage.frame_of[t])
-                for (w, pcs, scs, d_seg, d_t) in frame_occ[fr]:
-                    valid = home[w, pcs] == scs
-                    if valid.any():
-                        # a pair still current now was current ever since
-                        # its delivery (``home`` entries are only touched
-                        # by delivery, compute reuse, and retirement), so
-                        # the copy may run at any tick after the strip
-                        # landed and no later than this one
-                        lo = d_t + 1 if d_seg == seg_i else 0
-                        ret_chunks.append(
-                            (w, scs[valid], pcs[valid], min(lo, t), t)
-                        )
-                        home[w, pcs[valid]] = pcs[valid]
-                frame_occ[fr] = []
-            for r_i, r in enumerate(seg.rounds):
-                if not act_np[t, r_i]:
-                    continue
-                strip = soff[t, r_i]
-                for w in range(m):
-                    rw = round_rows[r_i][round_slots[r_i][t, w]]
-                    real = np.nonzero(rw != dump_col)[0]
-                    if not real.size:
-                        continue
-                    cols = rw[real]
-                    s = (w - r.delta) % m
-                    if not (home[s, cols] == cols).all():
-                        raise NotImplementedError(
-                            "staged comm: sender would forward a value it "
-                            "received rather than produced"
-                        )
-                    strips = strip + real.astype(np.int32)
-                    home[w, cols] = strips
-                    owner[w, cols] = pos2node[cols]
-                    if buffer_depth > 1:
-                        frame_occ[int(seg.stage.frame_of[t])].append(
-                            (w, np.asarray(cols, np.int32), strips, seg_i, t)
-                        )
         sig_tabs = []
         sig_infos = []
         span_elems = gather_elems = 0
@@ -1221,71 +1439,17 @@ def _build_segmented(
             xs["base"] = jnp.asarray(seg.stage.base)
             if len(patterns) > 1:
                 xs["pat"] = jnp.asarray(seg_patids[seg_i])
-        # per-tick retire tables (rotating frames only): dst-sorted
-        # (strip, packed) column pairs per worker, dump-padded to the
-        # segment max — one gather + one sorted scatter per tick moves a
-        # reused frame's surviving occupants home.  The scan body pads
-        # every tick to the segment's widest retire, so eviction bursts
-        # are first water-filled backward across their safe windows
-        # (delivery + 1 .. eviction), flattening the per-tick maximum
-        # toward the mean instead of the burst size.
-        ret_by_tw: Dict[Tuple[int, int], List[Tuple[np.ndarray, np.ndarray]]]
-        ret_by_tw = {}
-        if ret_chunks:
-            loads = np.zeros((n_ticks, m), np.int64)
-            for (w, scs, pcs, lo, hi) in ret_chunks:
-                counts = _waterfill(loads[:, w], lo, hi, len(scs))
-                off = 0
-                for t_r, c in zip(range(lo, hi + 1), counts):
-                    c = int(c)
-                    if not c:
-                        continue
-                    ret_by_tw.setdefault((t_r, w), []).append(
-                        (scs[off:off + c], pcs[off:off + c])
-                    )
-                    loads[t_r, w] += c
-                    off += c
-        retire_elems = 0
-        ret_k = max(
-            [0] + [
-                sum(len(s) for (s, _d) in chunks)
-                for chunks in ret_by_tw.values()
-            ]
-        )
+        # per-tick retire tables + barrier materialization pairs come from
+        # the shared schedule walk (plan_access_walk) — the same tables
+        # codegen/analyze.py verifies hazard-free
+        ret_k = acc.ret_src is not None
         if ret_k:
-            ret_src = np.full((n_ticks, m, ret_k), dump_col, np.int32)
-            ret_dst = np.full((n_ticks, m, ret_k), dump_col, np.int32)
-            for (t, w), chunks in ret_by_tw.items():
-                scs = np.concatenate([s for (s, _d) in chunks])
-                pcs = np.concatenate([d for (_s, d) in chunks])
-                order = np.argsort(pcs, kind="stable")
-                ret_src[t, w, : len(scs)] = scs[order]
-                ret_dst[t, w, : len(pcs)] = pcs[order]
-                retire_elems += len(pcs)
-            xs["rsrc"] = jnp.asarray(ret_src)
-            xs["rdst"] = jnp.asarray(ret_dst)
-        # barrier materialization (checkpoint runs only): copy every
-        # staged delivery back to its packed column, so snapshots stay
-        # bit-equivalent to the reference runner's barrier state (which
-        # writes deliveries straight into the register file, live or not)
-        # and fault-time replan/resume (migrate_registers) sees a
-        # canonical register file
+            xs["rsrc"] = jnp.asarray(acc.ret_src)
+            xs["rdst"] = jnp.asarray(acc.ret_dst)
+        retire_elems = acc.retire_elems
         mat = None
-        if checkpoint:
-            pairs = []
-            for w in range(m):
-                moved = np.nonzero(home[w] != ident)[0]
-                keep = sorted(p for p in moved if owner[w, p] >= 0)
-                pairs.append([(home[w, p], p) for p in keep])
-            k_max = max(len(p) for p in pairs)
-            if k_max:
-                src = np.full((m, k_max), dump_col, np.int32)
-                dst = np.full((m, k_max), dump_col, np.int32)
-                for w, pr in enumerate(pairs):
-                    for j, (s_c, d_c) in enumerate(pr):
-                        src[w, j] = s_c
-                        dst[w, j] = d_c
-                mat = (jnp.asarray(src), jnp.asarray(dst))
+        if acc.mat is not None:
+            mat = (jnp.asarray(acc.mat[0]), jnp.asarray(acc.mat[1]))
         seg_meta.append((
             sig_list, sig_infos, tuple(r.delta for r in seg.rounds),
             tuple(r.length for r in seg.rounds), single, patterns,

@@ -38,6 +38,7 @@ a plan in the uniform shape the segmented ``lax.scan`` executor needs:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
 import numpy as np
@@ -53,6 +54,7 @@ __all__ = [
     "build_plan",
     "coalesce_transfer_steps",
     "plan_summary",
+    "plan_fingerprint",
     "pack_registers",
     "build_segments",
     "CommRound",
@@ -114,6 +116,22 @@ class ExecutionPlan:
                 b = t.box_bytes()
                 total += out_bytes[t.node] if b is None else b
         return total
+
+
+def plan_fingerprint(plan: ExecutionPlan) -> str:
+    """Content hash of a plan's full observable structure (supersteps,
+    per-worker compute order, transfers with boxes) — the memo key for
+    validation caching: equal fingerprints validate identically."""
+    h = hashlib.sha256()
+    h.update(f"{plan.n_workers}|{plan.sink}|{plan.sink_worker}".encode())
+    for step in plan.steps:
+        for nodes in step.compute:
+            h.update("|".join(nodes).encode())
+            h.update(b";")
+        for t in step.transfers:
+            h.update(f"{t.node}>{t.src}>{t.dst}>{t.box}".encode())
+        h.update(b"#")
+    return h.hexdigest()
 
 
 def build_plan(schedule: Schedule, dag: DAG, lookahead: bool = True) -> ExecutionPlan:

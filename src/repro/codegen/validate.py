@@ -39,12 +39,26 @@ invariants every executor in the repo relies on:
   remainders), so the memcpy fast path is bit-equivalent to the element
   gather it replaces.
 
-The pass is pure numpy (no jax), so CI and the elastic replan path run it
-on every plan — original and replanned — before anything executes.
+Failure messages carry structured coordinates — ``[superstep 12, segment
+3, tick 7, worker 2, node 'conv2_s1']`` — so a finding inside a 165-task
+plan names the exact access to look at.
+
+``deep=True`` escalates from structural invariants to the happens-before
+hazard analysis of :mod:`repro.codegen.analyze` (race freedom, sync
+sufficiency, donation safety, determinism), raising
+:class:`~repro.codegen.analyze.PlanHazardError` (a subclass of
+:class:`PlanValidationError`) on any hazard.  Repeat validations of an
+identical (plan, dag, model) are memoized by content fingerprint, so
+wrapping every ``build_plan`` in the test suite stays flat-cost.
+
+The structural pass is pure numpy (no jax), so CI and the elastic replan
+path run it on every plan — original and replanned — before anything
+executes.
 """
 from __future__ import annotations
 
-from typing import Dict, Mapping, Optional, Set, Tuple
+import hashlib
+from typing import Dict, Mapping, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -52,6 +66,7 @@ from repro.codegen.plan import (
     ExecutionPlan,
     RegisterLayout,
     build_segments,
+    plan_fingerprint,
 )
 from repro.core.graph import DAG
 
@@ -62,8 +77,20 @@ class PlanValidationError(ValueError):
     """A plan violates a structural invariant the executors rely on."""
 
 
-def _fail(msg: str) -> None:
-    raise PlanValidationError(msg)
+_NAMED = ("node", "nodes", "register", "registers", "transfer")
+
+
+def _fail(msg: str, **coords) -> None:
+    """Raise with a structured coordinate prefix: every finding names the
+    (superstep/segment/tick/worker/register/frame) it points at."""
+    parts = []
+    for k, v in coords.items():
+        if v is None:
+            continue
+        label = k.replace("_", " ")
+        parts.append(f"{label} {v!r}" if k in _NAMED else f"{label} {v}")
+    prefix = f"[{', '.join(parts)}] " if parts else ""
+    raise PlanValidationError(prefix + msg)
 
 
 def _check_structure(plan: ExecutionPlan, dag: DAG) -> Dict[str, int]:
@@ -72,9 +99,11 @@ def _check_structure(plan: ExecutionPlan, dag: DAG) -> Dict[str, int]:
     m = plan.n_workers
     sinks = dag.sinks()
     if plan.sink not in sinks:
-        _fail(f"plan sink {plan.sink!r} is not a DAG sink {list(sinks)}")
+        _fail(
+            f"plan sink is not a DAG sink {list(sinks)}", node=plan.sink
+        )
     if not (0 <= plan.sink_worker < m):
-        _fail(f"sink worker {plan.sink_worker} out of range for m={m}")
+        _fail(f"sink worker out of range for m={m}", worker=plan.sink_worker)
 
     have: Dict[int, Set[str]] = {w: set() for w in range(m)}
     computed: Dict[int, Set[str]] = {w: set() for w in range(m)}
@@ -83,23 +112,24 @@ def _check_structure(plan: ExecutionPlan, dag: DAG) -> Dict[str, int]:
     for i, step in enumerate(plan.steps):
         if len(step.compute) != m:
             _fail(
-                f"superstep {i} has {len(step.compute)} compute segments "
-                f"for m={m} workers"
+                f"{len(step.compute)} compute segments for m={m} workers",
+                superstep=i,
             )
         for w, seg in enumerate(step.compute):
             for n in seg:
                 if n not in nodes:
-                    _fail(f"superstep {i}: unknown node {n!r} on worker {w}")
+                    _fail("unknown node", superstep=i, worker=w, node=n)
                 if n in computed[w]:
                     _fail(
-                        f"superstep {i}: node {n!r} computed twice on "
-                        f"worker {w}"
+                        "node computed twice on one worker",
+                        superstep=i, worker=w, node=n,
                     )
                 missing = [u for u in pm[n] if u not in have[w]]
                 if missing:
                     _fail(
-                        f"superstep {i}: worker {w} computes {n!r} without "
-                        f"local inputs {missing} (availability violated)"
+                        f"computed without local inputs {missing} "
+                        "(availability violated)",
+                        superstep=i, worker=w, node=n,
                     )
                 have[w].add(n)
                 computed[w].add(n)
@@ -107,25 +137,30 @@ def _check_structure(plan: ExecutionPlan, dag: DAG) -> Dict[str, int]:
         for t in step.transfers:
             n_transfers += 1
             if t.node not in nodes:
-                _fail(f"superstep {i}: transfer of unknown node {t.node!r}")
+                _fail(
+                    "transfer of unknown node", superstep=i,
+                    transfer=t.label(), node=t.node,
+                )
             if not (0 <= t.src < m) or not (0 <= t.dst < m):
                 _fail(
-                    f"superstep {i}: transfer {t.label()} endpoints out of "
-                    f"range for m={m}"
+                    f"transfer endpoints out of range for m={m}",
+                    superstep=i, transfer=t.label(),
                 )
             if t.src == t.dst:
-                _fail(f"superstep {i}: self-transfer {t.label()}")
+                _fail("self-transfer", superstep=i, transfer=t.label())
             if t.node not in computed[t.src]:
                 _fail(
-                    f"superstep {i}: transfer {t.label()} sources a worker "
-                    f"that never computed {t.node!r} (supplier liveness)"
+                    "transfer sources a worker that never computed the "
+                    "value (supplier liveness)",
+                    superstep=i, worker=t.src, transfer=t.label(),
+                    node=t.node,
                 )
             if t.box is not None:
                 for (lo, hi) in t.box:
                     if not (0 <= lo < hi):
                         _fail(
-                            f"superstep {i}: transfer {t.label()} has a "
-                            f"degenerate box interval ({lo}, {hi})"
+                            f"degenerate box interval ({lo}, {hi})",
+                            superstep=i, transfer=t.label(),
                         )
             have[t.dst].add(t.node)
 
@@ -134,8 +169,8 @@ def _check_structure(plan: ExecutionPlan, dag: DAG) -> Dict[str, int]:
         _fail(f"plan never computes {sorted(missing)}")
     if plan.sink not in computed[plan.sink_worker]:
         _fail(
-            f"sink {plan.sink!r} is never computed on its designated "
-            f"worker {plan.sink_worker}"
+            "sink is never computed on its designated worker",
+            worker=plan.sink_worker, node=plan.sink,
         )
     return {"supersteps": len(plan.steps), "transfers": n_transfers}
 
@@ -148,15 +183,17 @@ def _check_boxes(plan: ExecutionPlan, shapes: Mapping[str, Tuple[int, ...]]) -> 
             shape = shapes[t.node]
             if len(t.box) > len(shape):
                 _fail(
-                    f"superstep {i}: transfer {t.label()} box has "
-                    f"{len(t.box)} axes but {t.node!r} is {len(shape)}-d"
+                    f"box has {len(t.box)} axes but the producer is "
+                    f"{len(shape)}-d",
+                    superstep=i, transfer=t.label(), node=t.node,
                 )
             for ax, (lo, hi) in enumerate(t.box):
                 if hi > shape[ax]:
                     _fail(
-                        f"superstep {i}: transfer {t.label()} box axis {ax} "
-                        f"({lo}, {hi}) exceeds producer extent {shape[ax]} "
-                        f"(transfer window outside producer output)"
+                        f"box axis {ax} ({lo}, {hi}) exceeds producer "
+                        f"extent {shape[ax]} (transfer window outside "
+                        "producer output)",
+                        superstep=i, transfer=t.label(), node=t.node,
                     )
 
 
@@ -170,8 +207,9 @@ def _check_layout(
         off, sz = layout.offsets[n], layout.size(n)
         if off < 0 or off + sz > layout.total:
             _fail(
-                f"register {n!r} [{off}, {off + sz}) outside the packed "
-                f"buffer of {layout.total} elements (register sizing)"
+                f"register [{off}, {off + sz}) outside the packed buffer "
+                f"of {layout.total} elements (register sizing)",
+                register=n, column=off,
             )
     if liveness is None:
         return
@@ -183,18 +221,22 @@ def _check_layout(
                 ob, sb = layout.offsets[b], layout.size(b)
                 if not (oa + sa <= ob or ob + sb <= oa):
                     _fail(
-                        f"live registers {a!r} and {b!r} overlap in the "
-                        f"packed buffer (register overlap)"
+                        f"live registers overlap in the packed buffer "
+                        f"([{oa}, {oa + sa}) vs [{ob}, {ob + sb}), live "
+                        f"steps {birth[a]}..{death[a]} vs "
+                        f"{birth[b]}..{death[b]})",
+                        registers=(a, b), column=max(oa, ob),
                     )
 
 
 def _check_segments(
     plan: ExecutionPlan,
     layout: RegisterLayout,
+    staging_depths: Sequence[int],
 ) -> None:
     pad = layout.total + 2  # the executor's dump column
     segments = build_segments(plan, layout.shapes, layout.offsets, pad_index=pad)
-    for depth in (1, 2, 4):
+    for depth in staging_depths:
         _check_staging(
             build_segments(
                 plan, layout.shapes, layout.offsets, pad_index=pad,
@@ -209,27 +251,34 @@ def _check_segments(
         if a[1] != b[0]:
             _fail(f"segments are not contiguous at supersteps {a} -> {b}")
     m = plan.n_workers
-    for seg in segments:
+    for seg_i, seg in enumerate(segments):
         if list(seg.step_of_tick) != sorted(seg.step_of_tick):
-            _fail("segment ticks are not in superstep order (tick uniformity)")
+            _fail(
+                "segment ticks are not in superstep order (tick uniformity)",
+                segment=seg_i,
+            )
         for t, row in enumerate(seg.ticks):
             if len(row) != m:
                 _fail(
-                    f"tick {t} has {len(row)} worker cells for m={m} "
-                    f"(tick uniformity)"
+                    f"{len(row)} worker cells for m={m} (tick uniformity)",
+                    segment=seg_i, tick=t,
                 )
-        for r in seg.rounds:
+        for r_i, r in enumerate(seg.rounds):
             rows = np.asarray(r.rows)
             if rows.shape[0] < 1 or not (rows[0] == pad).all():
-                _fail(f"ring round delta={r.delta} row 0 is not all-padding")
+                _fail(
+                    "ring round row 0 is not all-padding",
+                    segment=seg_i, round=r_i, delta=r.delta,
+                )
             real = rows != pad
             if rows[real].size and (
                 rows[real].min() < 0 or rows[real].max() >= layout.total
             ):
                 _fail(
-                    f"ring round delta={r.delta} indexes outside the "
-                    f"register file [0, {layout.total}) (padding sentinel "
-                    f"contract violated)"
+                    f"ring round indexes outside the register file "
+                    f"[0, {layout.total}) (padding sentinel contract "
+                    "violated)",
+                    segment=seg_i, round=r_i, delta=r.delta,
                 )
             # padding strictly at the tail of every (sorted) row
             for k in range(rows.shape[0]):
@@ -237,42 +286,50 @@ def _check_segments(
                 n_real = int((row != pad).sum())
                 if (row[n_real:] != pad).any():
                     _fail(
-                        f"ring round delta={r.delta} row {k} interleaves "
-                        f"padding with real positions"
+                        f"ring round row {k} interleaves padding with real "
+                        "positions",
+                        segment=seg_i, round=r_i, delta=r.delta,
                     )
             # cohort invariants: dead rounds are elided at build time,
             # padding is tight (some member row fills the round), and no
             # referenced row beyond the sentinel row 0 is all-padding
             slot = np.asarray(r.slot)
             if r.length < 1:
-                _fail(f"ring round delta={r.delta} has length {r.length}")
+                _fail(
+                    f"ring round has length {r.length}",
+                    segment=seg_i, round=r_i, delta=r.delta,
+                )
             if not (slot != 0).any():
                 _fail(
-                    f"ring round delta={r.delta} has no active (tick, dst) "
-                    f"cell (dead rounds must be elided at build time)"
+                    "ring round has no active (tick, dst) cell (dead "
+                    "rounds must be elided at build time)",
+                    segment=seg_i, round=r_i, delta=r.delta,
                 )
             n_real_rows = (rows != pad).sum(axis=1)
             if rows.shape[0] > 1 and int(n_real_rows[1:].max()) != r.length:
                 _fail(
-                    f"ring round delta={r.delta} padded to {r.length} but "
-                    f"its widest row ships {int(n_real_rows[1:].max())} "
-                    f"(cohort padding must be tight)"
+                    f"ring round padded to {r.length} but its widest row "
+                    f"ships {int(n_real_rows[1:].max())} (cohort padding "
+                    "must be tight)",
+                    segment=seg_i, round=r_i, delta=r.delta,
                 )
             if rows.shape[0] > 1 and int(n_real_rows[1:].min()) == 0:
                 _fail(
-                    f"ring round delta={r.delta} references an all-padding "
-                    f"row beyond the sentinel row 0"
+                    "ring round references an all-padding row beyond the "
+                    "sentinel row 0",
+                    segment=seg_i, round=r_i, delta=r.delta,
                 )
         # rounds of one delta fire on disjoint ticks: a tick's payload for
         # a delta belongs to exactly one cohort
         by_delta: Dict[int, np.ndarray] = {}
-        for r in seg.rounds:
+        for r_i, r in enumerate(seg.rounds):
             active = (np.asarray(r.slot) != 0).any(axis=1)
             prev = by_delta.get(r.delta)
             if prev is not None and bool((prev & active).any()):
                 _fail(
-                    f"two ring rounds of delta={r.delta} are active on the "
-                    f"same tick (cohorts must partition a delta's ticks)"
+                    "two ring rounds of one delta are active on the same "
+                    "tick (cohorts must partition a delta's ticks)",
+                    segment=seg_i, round=r_i, delta=r.delta,
                 )
             by_delta[r.delta] = active if prev is None else (prev | active)
 
@@ -282,22 +339,30 @@ def _check_staging(segments, pad: int, depth: int) -> None:
 
     Write-once (``depth == 1``): every shipping tick's strips are
     allocated tick-major without overlap, so no delivered value is ever
-    clobbered.  Rotating (``depth >= 2``): frames are sized to the
-    globally largest tick payload, shipping ticks rotate frames
-    round-robin (a frame is reused no sooner than ``depth`` shipping
-    ticks later — the slack the executor's retire tables rely on), and
-    every block plus its read-back tail stays inside the staging region.
+    clobbered.  Rotating (any ``depth >= 2``): frames are sized to the
+    globally largest tick payload, shipping ticks rotate all ``depth``
+    frames round-robin (a frame is reused no sooner than ``depth``
+    shipping ticks later — the slack the executor's retire tables rely
+    on), and every block plus its read-back tail stays inside the staging
+    region.
     """
+    if depth < 1:
+        _fail(f"buffer depth {depth} < 1")
     stage_base = pad + 1
     glob_pay = 0
-    for seg in segments:
+    for seg_i, seg in enumerate(segments):
         st = seg.stage
         if st is None:
-            _fail(f"segment [{seg.start},{seg.stop}) has no staging layout")
+            _fail(
+                f"segment spanning supersteps [{seg.start},{seg.stop}) "
+                "has no staging layout",
+                segment=seg_i, depth=depth,
+            )
         if st.buffer_depth != depth or st.stage_base != stage_base:
             _fail(
                 f"staging header mismatch: depth {st.buffer_depth} vs "
-                f"{depth}, base {st.stage_base} vs {stage_base}"
+                f"{depth}, base {st.stage_base} vs {stage_base}",
+                segment=seg_i,
             )
         lens = np.asarray([r.length for r in seg.rounds], np.int64)
         act = np.stack(
@@ -305,16 +370,22 @@ def _check_staging(segments, pad: int, depth: int) -> None:
             axis=1,
         ) if seg.rounds else np.zeros((len(seg.ticks), 0), bool)
         if st.act.shape != act.shape or (st.act != act).any():
-            _fail("staging active-round mask disagrees with round slots")
+            _fail(
+                "staging active-round mask disagrees with round slots",
+                segment=seg_i, depth=depth,
+            )
         pay = (act * lens[None, :]).sum(axis=1) if seg.rounds else (
             np.zeros(len(seg.ticks), np.int64)
         )
         if (st.payloads != pay).any():
-            _fail("staging per-tick payloads disagree with round lengths")
+            _fail(
+                "staging per-tick payloads disagree with round lengths",
+                segment=seg_i, depth=depth,
+            )
         glob_pay = max(glob_pay, int(pay.max()) if pay.size else 0)
     off = stage_base
     g = 0
-    for seg in segments:
+    for seg_i, seg in enumerate(segments):
         st = seg.stage
         lmax = st.lmax
         for t in range(len(seg.ticks)):
@@ -324,7 +395,8 @@ def _check_staging(segments, pad: int, depth: int) -> None:
                     _fail(
                         f"write-once staging: tick base {int(st.base[t])} "
                         f"!= running offset {off} (strips must be "
-                        f"tick-major and clobber-free)"
+                        "tick-major and clobber-free)",
+                        segment=seg_i, tick=t, depth=depth,
                     )
                 o = off
             else:
@@ -332,23 +404,31 @@ def _check_staging(segments, pad: int, depth: int) -> None:
                     if int(st.frame_of[t]) != -1 or (
                         int(st.base[t]) != stage_base
                     ):
-                        _fail("idle tick must park its read-back block at "
-                              "the staging base")
+                        _fail(
+                            "idle tick must park its read-back block at "
+                            "the staging base",
+                            segment=seg_i, tick=t, depth=depth,
+                        )
                     continue
                 fr = int(st.frame_of[t])
                 if fr != g % depth:
                     _fail(
                         f"rotating staging: shipping tick {g} landed in "
                         f"frame {fr}, expected {g % depth} (round-robin "
-                        f"rotation gives retire its {depth}-tick slack)"
+                        f"rotation gives retire its {depth}-tick slack)",
+                        segment=seg_i, tick=t, frame=fr, depth=depth,
                     )
                 if pay_t > st.frame_elems:
                     _fail(
                         f"tick payload {pay_t} exceeds frame_elems "
-                        f"{st.frame_elems}"
+                        f"{st.frame_elems}",
+                        segment=seg_i, tick=t, frame=fr, depth=depth,
                     )
                 if int(st.base[t]) != stage_base + fr * st.frame_elems:
-                    _fail("rotating staging: tick base off its frame")
+                    _fail(
+                        "rotating staging: tick base off its frame",
+                        segment=seg_i, tick=t, frame=fr, depth=depth,
+                    )
                 g += 1
                 o = int(st.base[t])
             for r_i in np.nonzero(st.act[t])[0]:
@@ -356,25 +436,36 @@ def _check_staging(segments, pad: int, depth: int) -> None:
                     _fail(
                         f"round strip {int(st.soff[t, r_i])} != payload "
                         f"block offset {o} (landed blocks must be "
-                        f"contiguous in round order)"
+                        "contiguous in round order)",
+                        segment=seg_i, tick=t, round=int(r_i), depth=depth,
                     )
                 o += seg.rounds[r_i].length
             if depth == 1:
                 off = o
             if int(st.base[t]) + lmax > st.stage_end:
-                _fail("tick block + read-back tail spills past stage_end")
-    for seg in segments:
+                _fail(
+                    "tick block + read-back tail spills past stage_end",
+                    segment=seg_i, tick=t, depth=depth,
+                )
+    for seg_i, seg in enumerate(segments):
         st = seg.stage
         want_frame = glob_pay if depth > 1 else 0
         if st.frame_elems != want_frame:
             _fail(
                 f"frame_elems {st.frame_elems} != globally largest tick "
-                f"payload {want_frame}"
+                f"payload {want_frame}",
+                segment=seg_i, depth=depth,
             )
         if depth > 1 and st.stage_end < stage_base + depth * st.frame_elems:
-            _fail("staging region smaller than depth * frame_elems")
+            _fail(
+                "staging region smaller than depth * frame_elems",
+                segment=seg_i, depth=depth,
+            )
         if depth == 1 and st.stage_end < off:
-            _fail("write-once staging region smaller than its last strip")
+            _fail(
+                "write-once staging region smaller than its last strip",
+                segment=seg_i, depth=depth,
+            )
 
 
 def _check_spans(plan: ExecutionPlan, model, layout: RegisterLayout) -> None:
@@ -427,10 +518,39 @@ def _check_spans(plan: ExecutionPlan, model, layout: RegisterLayout) -> None:
                 p += ln
             if p != rows.shape[1] or not (rebuilt == rows).all():
                 _fail(
-                    f"span table of node {node!r} slot {j} does not "
-                    f"reconstruct its gather rows (span fast path would "
-                    f"diverge from the element gather)"
+                    f"span table slot {j} does not reconstruct its gather "
+                    "rows (span fast path would diverge from the element "
+                    "gather)",
+                    node=node,
                 )
+
+
+def _dag_fingerprint(dag: DAG) -> str:
+    pm = dag.parent_map()
+    h = hashlib.sha256()
+    for n in sorted(dag.nodes):
+        h.update(n.encode())
+        h.update(b"<")
+        h.update(",".join(pm.get(n, ())).encode())
+        h.update(b";")
+    return h.hexdigest()
+
+
+def _model_fingerprint(model) -> str:
+    if model is None:
+        return "-"
+    h = hashlib.sha256()
+    for l in model.layers:
+        h.update(
+            f"{l.name}|{getattr(l, 'op', '')}|{tuple(l.out_shape)};".encode()
+        )
+    return h.hexdigest()
+
+
+# validation memo: the conftest wrapper re-validates identical plans many
+# times per session — a content-hash hit skips the whole pass
+_MEMO: Dict[Tuple, Dict[str, int]] = {}
+_MEMO_LIMIT = 512
 
 
 def validate_plan(
@@ -438,15 +558,39 @@ def validate_plan(
     dag: DAG,
     model=None,
     liveness: bool = True,
+    *,
+    deep: bool = False,
+    staging_depths: Sequence[int] = (1, 2, 4),
+    cache: bool = True,
 ) -> Dict[str, int]:
     """Enforce the plan invariants; raise :class:`PlanValidationError`.
 
     With ``model`` (a :class:`~repro.models.cnn.CNNModel`), additionally
     checks transfer boxes against producer output shapes, packed-register
     sizing/overlap, and the segmented executor's tick/ring-round schema —
-    the full contract the segmented ``lax.scan`` path compiles against.
-    Returns summary statistics for reporting.
+    the full contract the segmented ``lax.scan`` path compiles against —
+    with the staging layout checked at every depth in ``staging_depths``
+    (any ``buffer_depth >= 1``).
+
+    ``deep=True`` additionally runs the happens-before hazard analysis
+    (:func:`repro.codegen.analyze.analyze_plan`): superstep-level race /
+    sync-sufficiency / determinism checks always, plus the cell-level
+    access replay over ``staging_depths`` when ``model`` is given.  Any
+    hazard raises :class:`~repro.codegen.analyze.PlanHazardError`.
+
+    Results are memoized by (plan, dag, model) content fingerprint
+    (``cache=False`` forces a re-run).  Returns summary statistics.
     """
+    key = None
+    if cache:
+        key = (
+            plan_fingerprint(plan), _dag_fingerprint(dag),
+            _model_fingerprint(model), liveness, deep,
+            tuple(staging_depths),
+        )
+        hit = _MEMO.get(key)
+        if hit is not None:
+            return dict(hit)
     stats = _check_structure(plan, dag)
     if model is not None:
         shapes = {l.name: tuple(l.out_shape) for l in model.layers}
@@ -459,7 +603,22 @@ def validate_plan(
             live = (birth, death)
         layout = RegisterLayout.of(plan, shapes, liveness=live)
         _check_layout(plan, layout, live)
-        _check_segments(plan, layout)
+        _check_segments(plan, layout, staging_depths)
         _check_spans(plan, model, layout)
         stats["packed_elements"] = layout.total
+    if deep:
+        from repro.codegen.analyze import analyze_plan
+
+        report = analyze_plan(
+            plan, dag, model, depths=tuple(staging_depths),
+            liveness=liveness, raise_on_hazard=True,
+        )
+        stats["hazards"] = 0
+        stats["analyzed_events"] = (
+            report.stats["plan_events"] + report.stats["cell_events"]
+        )
+    if cache and key is not None:
+        if len(_MEMO) >= _MEMO_LIMIT:
+            _MEMO.clear()
+        _MEMO[key] = dict(stats)
     return stats

@@ -192,9 +192,12 @@ class ElasticPlanner:
     seed-era behaviour).  Built with the sliced ``model`` behind that DAG
     it runs the full executable pipeline: ``build_plan`` →
     ``coalesce_transfer_steps`` → :func:`~repro.codegen.validate.
-    validate_plan` (a structurally broken replan is an exception, never a
-    deployed plan) → :func:`~repro.codegen.plan.wcet_certificate` (with
-    ``hw``), so every degraded plan ships with fresh deadline bounds.
+    validate_plan` with ``deep=True`` (a structurally broken *or
+    concurrency-hazardous* replan — data race, missing sync edge,
+    frame-reuse WAR, donation clobber — is an exception, never a deployed
+    plan; see :mod:`repro.codegen.analyze`) →
+    :func:`~repro.codegen.plan.wcet_certificate` (with ``hw``), so every
+    degraded plan ships with fresh deadline bounds.
     """
 
     def __init__(
@@ -223,7 +226,11 @@ class ElasticPlanner:
         if self.validate:
             from repro.codegen.validate import validate_plan
 
-            validate_plan(plan, self.dag, model=self.model)
+            # deep=True: structural invariants plus the happens-before
+            # hazard analysis (codegen/analyze.py) — a degraded replan
+            # with a data race, missing sync edge, or donation hazard is
+            # a PlanHazardError here, never a deployed plan
+            validate_plan(plan, self.dag, model=self.model, deep=True)
         cert = None
         if self.hw is not None:
             out_bytes = {

@@ -218,7 +218,9 @@ class Frontend:
         if validate:
             from repro.codegen.validate import validate_plan
 
-            validate_plan(self.plan, dag, model=model)
+            # deep=True: the serving plan is proved race-free /
+            # sync-sufficient / donation-safe before the first request
+            validate_plan(self.plan, dag, model=model, deep=True)
         self.layout = _plan_layout(self.plan, model)
         self.worker_ids: List[int] = list(range(m))  # plan index -> monitor id
         self.cordoned: Set[int] = set()  # stragglers replanned out, still alive

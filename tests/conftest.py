@@ -31,15 +31,18 @@ def subproc():
 
 
 def _install_plan_validation() -> None:
-    """Run ``validate_plan`` on every plan ``build_plan`` produces in-suite.
+    """Run ``validate_plan(deep=True)`` on every plan ``build_plan``
+    produces in-suite.
 
-    The static-analysis pass (structural checks only — numpy, no model, no
-    jax) acts as a CI tripwire: any scheduler/plan-construction change that
-    emits a structurally broken plan fails loudly at build time instead of
-    as a numeric divergence three layers down.  Installed at conftest
-    *import* time, before test modules are collected, so ``from
-    repro.codegen import build_plan`` in any test binds the checked
-    wrapper.
+    The static-analysis pass (structural checks + the superstep-level
+    happens-before hazard analysis — numpy, no model, no jax) acts as a CI
+    tripwire: any scheduler/plan-construction change that emits a broken
+    or racy plan fails loudly at build time instead of as a numeric
+    divergence three layers down.  Identical plans are deduplicated by the
+    validator's content-fingerprint memo, so re-building the same plan
+    across tests costs one hash.  Installed at conftest *import* time,
+    before test modules are collected, so ``from repro.codegen import
+    build_plan`` in any test binds the checked wrapper.
     """
     sys.path.insert(0, SRC)
     import repro.codegen as codegen
@@ -52,7 +55,7 @@ def _install_plan_validation() -> None:
 
     def build_plan_checked(schedule, dag, *args, **kwargs):
         plan = inner(schedule, dag, *args, **kwargs)
-        validate_plan(plan, dag)
+        validate_plan(plan, dag, deep=True)
         return plan
 
     build_plan_checked._validated = True
